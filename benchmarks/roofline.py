@@ -1,0 +1,132 @@
+"""Roofline analysis (deliverable g): derive the three roofline terms per
+(arch x input-shape x mesh) from the stored dry-run artifacts.
+
+    compute    = HLO_FLOPs        / (chips * 197e12 FLOP/s)
+    memory     = HLO_bytes        / (chips * 819e9  B/s)
+    collective = collective_bytes / (chips * 50e9 B/s * links)
+
+FLOPs/bytes come from the dry-run's while-trip-count-corrected HLO roll-up
+(launch/hlo_analysis.py) — these are WHOLE-PROGRAM totals, so per-chip terms
+divide by the device count. Collective bytes are summed over all
+all-gather/all-reduce/reduce-scatter/all-to-all/collective-permute result
+shapes in the post-SPMD HLO (already per-device shards). Each chip drives
+~4 ICI links on the 2D torus but a given collective is typically
+bandwidth-bound on one axis => links=2 effective.
+
+Also reports MODEL_FLOPS = 6*N(_active)*D and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste detector).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 2.0
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(results_dir: str = RESULTS_DIR) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict:
+    """Three terms (seconds) + bottleneck + useful-compute ratio for the
+    *primary* step of a record (train / prefill / decode)."""
+    step_name = {"train": "train", "prefill": "prefill", "decode": "decode"}[
+        rec["mode"]
+    ]
+    step = rec["steps"][step_name]
+    chips = step["n_devices"]
+
+    # the post-SPMD HLO is the PER-DEVICE program: its rolled-up FLOPs,
+    # HBM bytes and collective shard bytes are already per-chip quantities.
+    t_compute = step["flops"] / PEAK_FLOPS
+    t_memory = step["hbm_bytes"] / HBM_BW
+    # the rolled HBM count uses CPU-backend kernel granularity (far less
+    # fusion than the TPU compiler) => upper bound. XLA's own bytes-accessed
+    # (while bodies counted once) is the optimistic lower bound.
+    t_memory_lb = step.get("xla_bytes_accessed", 0.0) / HBM_BW
+    coll_bytes = sum(step["collectives"]["bytes"].values())
+    t_coll = coll_bytes / (ICI_BW * ICI_LINKS)
+
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    # MODEL_FLOPS = 6*N(_active)*D total (model_flops_per_token includes the
+    # x6 fwd+bwd factor for train; serve steps use a fwd-only 2*N factor)
+    model_flops = rec["model_flops_per_token"] * rec["tokens_per_step"]
+    if rec["mode"] != "train":
+        model_flops /= 3.0  # forward-only: 2*N, not 6*N
+    model_per_chip = model_flops / chips
+    useful = model_per_chip / max(step["flops"], 1.0)
+
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "step": step_name,
+        "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_lb_s": t_memory_lb,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "model_flops_per_chip": model_per_chip,
+        "hlo_flops": step["flops"],
+        "useful_ratio": useful,
+        "roofline_s": max(terms.values()),
+        "collective_counts": step["collectives"]["counts"],
+        "collective_bytes": step["collectives"]["bytes"],
+        "memory_per_device": step.get("memory", {}),
+    }
+
+
+def table(results_dir: str = RESULTS_DIR, mesh: str = "singlepod"):
+    recs = [r for r in load_records(results_dir) if r["mesh"] == mesh]
+    rows = [roofline_terms(r) for r in recs]
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def main():
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="singlepod",
+                    choices=["singlepod", "multipod"])
+    ap.add_argument("--dir", default=RESULTS_DIR)
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+
+    rows = table(args.dir, args.mesh)
+    hdr = ["arch", "shape", "step", "compute_s", "memory_s", "collective_s",
+           "bottleneck", "useful_ratio"]
+    print(",".join(hdr))
+    for r in rows:
+        print(",".join([
+            r["arch"], r["shape"], r["step"],
+            f"{r['t_compute_s']:.3e}", f"{r['t_memory_s']:.3e}",
+            f"{r['t_collective_s']:.3e}", r["bottleneck"],
+            f"{r['useful_ratio']:.3f}",
+        ]))
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    n_by_bn = {}
+    for r in rows:
+        n_by_bn[r["bottleneck"]] = n_by_bn.get(r["bottleneck"], 0) + 1
+    print(f"\n# {len(rows)} combos on {args.mesh}; bottleneck split: {n_by_bn}")
+
+
+if __name__ == "__main__":
+    main()

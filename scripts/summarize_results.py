@@ -1,0 +1,60 @@
+"""One-shot report over everything under results/: dry-run coverage,
+roofline headline, and §Perf before/after deltas.
+
+  PYTHONPATH=src python scripts/summarize_results.py
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import roofline_terms  # noqa: E402
+
+
+def main():
+    dr = sorted(glob.glob("results/dryrun/*.json"))
+    by_mesh = {}
+    for p in dr:
+        mesh = p.rsplit("__", 1)[1].split(".")[0]
+        by_mesh[mesh] = by_mesh.get(mesh, 0) + 1
+    print(f"dry-run artifacts: {len(dr)} ({by_mesh}) — expected 80 (40+40)")
+
+    rows = [roofline_terms(json.load(open(p))) for p in dr
+            if "singlepod" in p]
+    bn = {}
+    for r in rows:
+        bn[r["bottleneck"]] = bn.get(r["bottleneck"], 0) + 1
+    worst = min(rows, key=lambda r: r["useful_ratio"])
+    most_coll = max(rows, key=lambda r: r["t_collective_s"])
+    print(f"roofline (singlepod): bottleneck split {bn}")
+    print(f"  worst useful-ratio : {worst['arch']} x {worst['shape']} "
+          f"({worst['useful_ratio']:.3f})")
+    print(f"  most collective    : {most_coll['arch']} x {most_coll['shape']} "
+          f"({most_coll['t_collective_s']:.1f} s/step)")
+
+    print("\nperf experiments (results/perf):")
+    for p in sorted(glob.glob("results/perf/*.json")):
+        rec = json.load(open(p))
+        tag = os.path.basename(p).replace(".json", "")
+        base_tag = tag.split("__")
+        base_path = os.path.join("results/dryrun",
+                                 "__".join(base_tag[:3]) + ".json")
+        step_name = rec["mode"] if rec["mode"] != "train" else "train"
+        step = rec["steps"][step_name]
+        line = (f"  {tag}: coll={sum(step['collectives']['bytes'].values()):.3e} "
+                f"hbm={step['hbm_bytes']:.3e} flops={step['flops']:.3e}")
+        if os.path.exists(base_path):
+            b = json.load(open(base_path))["steps"][step_name]
+            bc = sum(b["collectives"]["bytes"].values())
+            oc = sum(step["collectives"]["bytes"].values())
+            if oc > 0:
+                line += f"  [coll x{bc / oc:.2f} vs baseline]"
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

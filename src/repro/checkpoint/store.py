@@ -1,0 +1,84 @@
+"""Checkpointing: flat-path npz store for arbitrary pytrees + host metadata.
+
+Production notes: on a real pod each host writes its addressable shards
+(`save_sharded`); here (single host) that degenerates to a full save. The
+format is dependency-free: one .npz for tensors, one .json for metadata and
+treedef paths.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+SEP = "/"
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_key_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+# dtypes numpy's npz cannot round-trip (ml_dtypes extensions) are stored as
+# same-width unsigned-int views with the true dtype recorded in metadata.
+_SAFE_KINDS = "fiub?c"
+
+
+def save(path: str, tree: PyTree, metadata: Optional[dict] = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    flat = _flatten(tree)
+    dtypes = {}
+    enc = {}
+    for k, arr in flat.items():
+        if arr.dtype.kind not in _SAFE_KINDS:
+            dtypes[k] = str(arr.dtype)
+            enc[k] = arr.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[
+                arr.dtype.itemsize
+            ])
+        else:
+            enc[k] = arr
+    np.savez(os.path.join(path, "tensors.npz"), **enc)
+    meta = dict(metadata or {})
+    meta["_keys"] = sorted(flat.keys())
+    meta["_dtypes"] = dtypes
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1, default=float)
+
+
+def load(path: str, like: PyTree) -> tuple[PyTree, dict]:
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    data = np.load(os.path.join(path, "tensors.npz"))
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    stored_dtypes = meta.get("_dtypes", {})
+    leaves = []
+    for p, leaf in paths:
+        key = SEP.join(_key_str(x) for x in p)
+        arr = data[key]
+        if key in stored_dtypes:
+            arr = arr.view(np.dtype(stored_dtypes[key]))
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {np.shape(leaf)}")
+        leaves.append(arr.astype(np.asarray(leaf).dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
+
+
+def load_metadata(path: str) -> dict:
+    with open(os.path.join(path, "meta.json")) as f:
+        return json.load(f)

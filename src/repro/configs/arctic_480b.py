@@ -1,0 +1,4 @@
+"""--arch arctic-480b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["arctic-480b"]

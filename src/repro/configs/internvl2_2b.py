@@ -1,0 +1,4 @@
+"""--arch internvl2-2b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["internvl2-2b"]

@@ -1,0 +1,4 @@
+"""--arch jamba-1.5-large-398b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["jamba-1.5-large-398b"]

@@ -1,0 +1,4 @@
+"""--arch kimi-k2-1t-a32b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["kimi-k2-1t-a32b"]

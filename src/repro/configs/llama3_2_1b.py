@@ -1,0 +1,4 @@
+"""--arch llama3.2-1b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["llama3.2-1b"]

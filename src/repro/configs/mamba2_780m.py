@@ -1,0 +1,4 @@
+"""--arch mamba2-780m (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["mamba2-780m"]

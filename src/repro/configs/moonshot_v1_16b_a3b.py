@@ -1,0 +1,4 @@
+"""--arch moonshot-v1-16b-a3b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["moonshot-v1-16b-a3b"]

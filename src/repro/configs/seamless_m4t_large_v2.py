@@ -1,0 +1,4 @@
+"""--arch seamless-m4t-large-v2 (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["seamless-m4t-large-v2"]

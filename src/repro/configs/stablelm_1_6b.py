@@ -1,0 +1,4 @@
+"""--arch stablelm-1.6b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["stablelm-1.6b"]

@@ -1,0 +1,4 @@
+"""--arch tinyllama-1.1b (see archs.py for the cited spec)."""
+from .archs import ARCHS
+
+CONFIG = ARCHS["tinyllama-1.1b"]

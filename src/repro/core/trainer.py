@@ -1,0 +1,324 @@
+"""ElasticTrainer: mega-batch training loop for Adaptive SGD + all baselines.
+
+Algorithms (paper §5.1):
+  * ``adaptive``  — the paper's contribution: dynamic scheduling + batch size
+                    scaling (Alg. 1) + normalized model merging (Alg. 2).
+  * ``elastic``   — elastic model averaging (K-step averaging): static equal
+                    batches, plain average merge, same momentum update rule.
+  * ``sync``      — gradient aggregation (TensorFlow-mirrored): per-round
+                    gradient averaging, per-GPU batch = b_max / R.
+  * ``crossbow``  — CROSSBOW synchronous model averaging: independent
+                    learners corrected toward the replica average each round.
+  * ``single``    — one worker (R=1); Adaptive == Elastic == mini-batch SGD.
+
+The trainer is model-agnostic: a *model* is ``{'init': rng->params,
+'loss_fn': (params, batch)->(loss, aux)}`` and a *provider* supplies padded
+fixed-slot batches (data/providers.py). Distribution: the same jitted round
+function runs single-device (tests) or sharded — leaves carry a leading
+replica dim R which the launcher shards over the replica mesh axis.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ElasticConfig
+from repro.core import adaptive_sgd as asgd
+from repro.core.heterogeneity import CostModel, SpeedModel
+from repro.core.scheduler import DynamicScheduler, MegaBatchPlan
+from repro.optim.sgd import SGDConfig, init_momentum, sgd_update
+from repro.utils import tree as tu
+from repro.utils.logging import MetricsLog, log
+
+PyTree = Any
+
+
+@dataclass
+class ElasticState:
+    replicas: PyTree                 # leaves (R, ...)
+    global_model: Optional[PyTree]
+    prev_global: Optional[PyTree]
+    momentum: Optional[PyTree]
+    b: np.ndarray                    # per-replica batch size (may be fractional)
+    lr: np.ndarray                   # per-replica learning rate
+    megabatch_idx: int = 0
+
+
+@dataclass
+class ElasticTrainer:
+    model: dict
+    provider: Any
+    cfg: ElasticConfig
+    sgd: SGDConfig = field(default_factory=SGDConfig)
+    base_lr: float = 0.05
+    speed: Optional[SpeedModel] = None
+    merge_cost: float = 5e-3         # virtual seconds per merge (all-reduce)
+    keep_global_copies: bool = True  # False = paper §4 memory-lean merging
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.speed is None:
+            self.speed = SpeedModel(self.cfg.n_replicas, seed=self.seed)
+        self.cost = CostModel(self.speed)
+        self.scheduler = DynamicScheduler(self.cfg, self.cost)
+        self._build_jits()
+
+    # ------------------------------------------------------------------
+    # jitted device functions
+    # ------------------------------------------------------------------
+    def _build_jits(self):
+        loss_fn = self.model["loss_fn"]
+
+        def round_fn(replicas, momentum, batch, lr_vec, update_mask, avg_grads):
+            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+            (loss, aux), grads = jax.vmap(grad_fn)(replicas, batch)
+            if avg_grads:  # gradient aggregation: all replicas share the mean
+                grads = tu.tree_map(
+                    lambda g: jnp.broadcast_to(
+                        jnp.mean(g, axis=0, keepdims=True), g.shape
+                    ),
+                    grads,
+                )
+            new_replicas, new_momentum = sgd_update(
+                replicas,
+                grads,
+                lr_vec,
+                self.sgd,
+                momentum_state=momentum,
+                update_mask=update_mask,
+                replica_dim=True,
+            )
+            metrics = {
+                "loss": loss,
+                "accuracy": aux["accuracy"],
+                "n_valid": aux["n_valid"],
+            }
+            return new_replicas, new_momentum, metrics
+
+        self._round = jax.jit(round_fn, static_argnames=("avg_grads",))
+
+        def merge_fn(replicas, alphas, global_model, prev_global, gamma):
+            new_global = asgd.normalized_merge(
+                replicas, alphas, global_model, prev_global, gamma
+            )
+            R = jax.tree_util.tree_leaves(replicas)[0].shape[0]
+            new_replicas = tu.tree_broadcast_replicas(new_global, R)
+            return new_global, new_replicas
+
+        self._merge = jax.jit(merge_fn, static_argnames=("gamma",))
+        self._norms = jax.jit(lambda r: tu.tree_l2_norm_per_replica(r))
+
+        def crossbow_fn(replicas, c):
+            center = tu.tree_map(
+                lambda l: jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True),
+                replicas,
+            )
+            corrected = tu.tree_map(
+                lambda l, m: (l.astype(jnp.float32) - c * (l.astype(jnp.float32) - m)).astype(l.dtype),
+                replicas,
+                center,
+            )
+            return corrected, tu.tree_map(lambda m: m[0].astype(jnp.float32), center)
+
+        self._crossbow = jax.jit(crossbow_fn, static_argnames=("c",))
+
+        self._eval = jax.jit(loss_fn)
+
+    # ------------------------------------------------------------------
+    # state init
+    # ------------------------------------------------------------------
+    def init_state(self) -> ElasticState:
+        R = self.cfg.n_replicas
+        rng = jax.random.PRNGKey(self.seed)
+        params = self.model["init"](rng)
+        replicas = tu.tree_broadcast_replicas(params, R)
+        momentum = init_momentum(replicas, self.sgd)
+        if self.cfg.algorithm == "sync":
+            b0 = max(self.cfg.b_min, self.cfg.b_max // R)
+        else:
+            b0 = self.cfg.b_max  # paper: initialize at b_max (Fig. 10a)
+        b = np.full(R, float(b0))
+        lr = np.full(R, self.base_lr * b0 / self.cfg.b_max)
+        keep = self.keep_global_copies and self.cfg.algorithm in ("adaptive", "elastic")
+        return ElasticState(
+            replicas=replicas,
+            global_model=params if keep else None,
+            prev_global=params if keep else None,
+            momentum=momentum,
+            b=b,
+            lr=lr,
+        )
+
+    # ------------------------------------------------------------------
+    # one mega-batch
+    # ------------------------------------------------------------------
+    def run_megabatch(self, state: ElasticState) -> tuple[ElasticState, dict]:
+        cfg = self.cfg
+        R = cfg.n_replicas
+        algo = cfg.algorithm
+        mega_samples = cfg.mega_batch * cfg.b_max
+        b_slots = cfg.b_max
+
+        def fetch(i, take):
+            payload = self.provider.fetch(take, b_slots)
+            return payload, self.provider.work_units(payload)
+
+        if algo in ("adaptive",):
+            plan = self.scheduler.plan_megabatch(
+                np.round(state.b).astype(np.int64), mega_samples, fetch_fn=fetch
+            )
+        elif algo == "single":
+            plan = self.scheduler.plan_megabatch(
+                np.round(state.b).astype(np.int64), mega_samples, fetch_fn=fetch
+            )
+        else:  # elastic / sync / crossbow: static equal partitioning
+            per_rep = max(1, int(round(mega_samples / (R * state.b[0]))))
+            plan = self.scheduler.plan_static(int(state.b[0]), per_rep, fetch_fn=fetch)
+
+        # ---- execute lockstep rounds ----
+        grid: list[list] = [[None] * R for _ in range(plan.n_rounds)]
+        for d in plan.dispatches:
+            grid[d.round][d.replica] = d.payload
+        replicas, momentum = state.replicas, state.momentum
+        losses, accs = [], []
+        avg_grads = algo == "sync"
+        for r in range(plan.n_rounds):
+            payloads = [
+                p if p is not None else self.provider.empty(b_slots)
+                for p in grid[r]
+            ]
+            update_mask = jnp.asarray(
+                [1.0 if p is not None else 0.0 for p in grid[r]], jnp.float32
+            )
+            batch = {k: jnp.asarray(v) for k, v in self.provider.stack(payloads).items()}
+            lr_vec = jnp.asarray(state.lr, jnp.float32)
+            replicas, momentum, m = self._round(
+                replicas, momentum, batch, lr_vec, update_mask, avg_grads
+            )
+            w = np.asarray(update_mask)
+            if w.sum() > 0:
+                losses.append(float((np.asarray(m["loss"]) * w).sum() / w.sum()))
+                accs.append(float((np.asarray(m["accuracy"]) * w).sum() / w.sum()))
+            if algo == "crossbow":
+                replicas, _ = self._crossbow(replicas, cfg.crossbow_correction)
+
+        # ---- merge ----
+        pert_active = False
+        alphas = np.full(R, 1.0 / R)
+        if algo == "adaptive":
+            alphas = asgd.merge_weights(plan.u, state.b)
+            norms = np.asarray(self._norms(replicas))
+            n_param = tu.tree_size(replicas) / R
+            alphas, pert_active = asgd.apply_perturbation(
+                alphas, plan.u, norms / n_param, cfg
+            )
+            new_global, replicas = self._merge(
+                replicas,
+                jnp.asarray(alphas, jnp.float32),
+                state.global_model,
+                state.prev_global,
+                cfg.gamma if state.global_model is not None else 0.0,
+            )
+            prev_global = state.global_model
+            new_b, new_lr = asgd.batch_size_scaling(state.b, state.lr, plan.u, cfg)
+        elif algo == "elastic":
+            new_global, replicas = self._merge(
+                replicas,
+                jnp.asarray(alphas, jnp.float32),
+                state.global_model,
+                state.prev_global,
+                cfg.gamma if state.global_model is not None else 0.0,
+            )
+            prev_global = state.global_model
+            new_b, new_lr = state.b, state.lr
+        elif algo == "crossbow":
+            replicas, new_global = self._crossbow(replicas, cfg.crossbow_correction)
+            prev_global, new_b, new_lr = None, state.b, state.lr
+        else:  # sync / single: replicas are identical already
+            new_global = tu.tree_replica_slice(replicas, 0)
+            prev_global, new_b, new_lr = None, state.b, state.lr
+
+        # merge happens at the barrier and costs virtual time on every replica.
+        # sync/crossbow merge after EVERY batch (paper: TensorFlow "updates the
+        # global model after every batch"), elastic/adaptive once per mega-batch.
+        n_merges = plan.n_rounds if algo in ("sync", "crossbow") else 1
+        self.scheduler.clock.t[:] += self.merge_cost * n_merges
+        virtual_time = float(self.scheduler.clock.t.max())
+
+        new_state = ElasticState(
+            replicas=replicas,
+            global_model=new_global if state.global_model is not None or algo in ("crossbow", "sync", "single") else new_global,
+            prev_global=prev_global,
+            momentum=momentum,
+            b=np.asarray(new_b, np.float64),
+            lr=np.asarray(new_lr, np.float64),
+            megabatch_idx=state.megabatch_idx + 1,
+        )
+        info = {
+            "u": plan.u.tolist(),
+            "b": np.round(np.asarray(new_b), 2).tolist(),
+            "lr": np.round(np.asarray(new_lr), 6).tolist(),
+            "alphas": np.round(alphas, 4).tolist(),
+            "pert_active": bool(pert_active),
+            "train_loss": float(np.mean(losses)) if losses else float("nan"),
+            "train_accuracy": float(np.mean(accs)) if accs else float("nan"),
+            "virtual_time": virtual_time,
+            "n_rounds": plan.n_rounds,
+        }
+        return new_state, info
+
+    # ------------------------------------------------------------------
+    # evaluation + full run
+    # ------------------------------------------------------------------
+    def evaluate(self, params: PyTree, test_batches: list) -> dict:
+        tot_acc, tot_loss, tot_n = 0.0, 0.0, 0.0
+        for payload in test_batches:
+            batch = {
+                k: jnp.asarray(v)
+                for k, v in self.provider.stack([payload]).items()
+            }
+            batch = {k: v[0] for k, v in batch.items()}
+            loss, aux = self._eval(params, batch)
+            n = float(aux["n_valid"])
+            tot_acc += float(aux["accuracy"]) * n
+            tot_loss += float(loss) * n
+            tot_n += n
+        return {
+            "accuracy": tot_acc / max(tot_n, 1.0),
+            "loss": tot_loss / max(tot_n, 1.0),
+        }
+
+    def run(
+        self,
+        n_megabatches: int,
+        test_batches: Optional[list] = None,
+        eval_every: int = 1,
+        verbose: bool = False,
+    ) -> tuple[ElasticState, MetricsLog]:
+        state = self.init_state()
+        mlog = MetricsLog()
+        t0 = time.perf_counter()
+        for mb in range(n_megabatches):
+            state, info = self.run_megabatch(state)
+            if test_batches is not None and (mb + 1) % eval_every == 0:
+                ev = self.evaluate(state.global_model, test_batches)
+                info.update(accuracy=ev["accuracy"], test_loss=ev["loss"])
+            info["megabatch"] = mb + 1
+            info["wall_clock"] = time.perf_counter() - t0
+            mlog.append(**info)
+            if verbose:
+                log(
+                    f"[{self.cfg.algorithm}] mb={mb+1}",
+                    loss=round(info["train_loss"], 4),
+                    acc=round(info.get("accuracy", float("nan")), 4),
+                    u=info["u"],
+                    b=info["b"],
+                    vt=round(info["virtual_time"], 3),
+                )
+        return state, mlog

@@ -1,0 +1,72 @@
+"""Data providers: the trainer's uniform batch interface.
+
+A provider fetches variable-size batches into fixed-slot payloads, reports
+their work units (nnz / tokens — feeds the virtual clock), and stacks R
+per-replica payloads into the (R, ...) device arrays of a lockstep round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .batcher import SparseBatcher, stack_replica_batches
+from .sparse import SparseBatch, SparseDataset, pack_batch
+from .tokens import TokenStream, stack_token_batches
+
+
+@dataclass
+class SparseProvider:
+    batcher: SparseBatcher
+
+    @staticmethod
+    def make(ds: SparseDataset, seed: int = 0) -> "SparseProvider":
+        return SparseProvider(SparseBatcher(ds, seed=seed))
+
+    def fetch(self, take: int, b_slots: int) -> SparseBatch:
+        return self.batcher.next_batch(take, b_slots)
+
+    def empty(self, b_slots: int) -> SparseBatch:
+        return self.batcher.empty(b_slots)
+
+    def work_units(self, payload: SparseBatch) -> int:
+        return payload.total_nnz
+
+    def stack(self, payloads: list[SparseBatch]) -> dict:
+        return stack_replica_batches(payloads)
+
+    def test_batches(self, ds: SparseDataset, b_slots: int, max_samples: int = 0):
+        """Pack a test dataset into full-size batches for evaluation."""
+        n = ds.n_samples if not max_samples else min(ds.n_samples, max_samples)
+        out = []
+        for s in range(0, n, b_slots):
+            ids = np.arange(s, min(s + b_slots, n))
+            out.append(
+                pack_batch(ds, ids, b_slots, self.batcher.max_nnz, self.batcher.max_labels)
+            )
+        return out
+
+
+@dataclass
+class TokenProvider:
+    stream: TokenStream
+    seq_len: int
+
+    @staticmethod
+    def make(vocab_size: int, seq_len: int, seed: int = 0) -> "TokenProvider":
+        return TokenProvider(TokenStream(vocab_size, seed=seed), seq_len)
+
+    def fetch(self, take: int, b_slots: int) -> dict:
+        return self.stream.batch(take, b_slots, self.seq_len)
+
+    def empty(self, b_slots: int) -> dict:
+        return self.stream.batch(0, b_slots, self.seq_len)
+
+    def work_units(self, payload: dict) -> int:
+        return int(payload["sample_mask"].sum()) * self.seq_len
+
+    def stack(self, payloads: list[dict]) -> dict:
+        return stack_token_batches(payloads)
+
+    def test_batches(self, n_batches: int, b_slots: int):
+        return [self.fetch(b_slots, b_slots) for _ in range(n_batches)]

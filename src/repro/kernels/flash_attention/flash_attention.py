@@ -1,0 +1,158 @@
+"""Pallas TPU flash attention (GQA-native, causal / sliding-window).
+
+Online-softmax tiling: grid = (B, Hq, nQ, nKV) with the KV dimension
+innermost (TPU grids execute sequentially, so the f32 accumulator tiles in
+VMEM scratch carry across the KV loop). Per step the MXU sees a
+(block_q, hd) x (hd, block_k) score matmul and a (block_q, block_k) x
+(block_k, hd) value matmul — both hardware-aligned when block_* are
+multiples of 128 and hd is a lane multiple.
+
+GQA is *native*: the index_map of K/V divides the query-head grid index by
+the group size, so KV tiles are fetched once per KV head — never repeated in
+HBM or VMEM (the same property the jnp fallback in models/layers.py has).
+
+Causal/sliding masks are applied with 2-D iota position tiles; fully-masked
+KV tiles short-circuit via ``pl.when`` (no MXU work, no accumulator touch),
+which is what makes the causal lower-triangle ~2x cheaper and the sliding
+window O(S·W) instead of O(S²).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = float("-inf")
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref,
+    acc_ref, m_ref, l_ref,
+    *, causal: bool, window: int, block_q: int, block_k: int, skv: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_kv = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # tile-level reachability: any (q, k) with q >= k (causal) and
+    # q - k < window (sliding) inside this tile pair?
+    conds = []
+    if causal:
+        conds.append(q_start + block_q - 1 >= k_start)
+    if window > 0:
+        conds.append(q_start - (k_start + block_k - 1) < window)
+    live = functools.reduce(jnp.logical_and, conds) if conds else (ki >= 0)
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)   # (BQ, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)   # (BK, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        hd = q.shape[-1]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * (hd ** -0.5)                             # (BQ, BK)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        rel = qpos - kpos
+        allow = kpos < skv  # guard KV right-padding
+        if causal:
+            allow = jnp.logical_and(allow, rel >= 0)
+        if window > 0:
+            allow = jnp.logical_and(allow, rel < window)
+        s = jnp.where(allow, s, NEG_INF)
+
+        m_prev = m_ref[...]                          # (BQ, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+        p = jnp.exp(s - m_safe)
+        p = jnp.where(allow, p, 0.0)
+        corr = jnp.where(jnp.isinf(m_prev), 0.0, jnp.exp(m_prev - m_safe))
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,     # (B, Sq, Hq, hd)
+    k: jax.Array,     # (B, Skv, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+
+    pad_q = (-sq) % block_q
+    pad_k = (-skv) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sqp, skvp = sq + pad_q, skv + pad_k
+
+    grid = (b, hq, sqp // block_q, skvp // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, skv=skv,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda bi, h, qi, ki: (bi, qi, h, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, hd), lambda bi, h, qi, ki: (bi, ki, h // rep, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, hd), lambda bi, h, qi, ki: (bi, ki, h // rep, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, hd), lambda bi, h, qi, ki: (bi, qi, h, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, sqp, hq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :sq]

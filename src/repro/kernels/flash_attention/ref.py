@@ -1,0 +1,31 @@
+"""Pure-jnp oracle: exact softmax attention, GQA-native, causal/sliding.
+
+q (B, Sq, Hq, hd); k, v (B, Skv, Hkv, hd); Hq % Hkv == 0.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, rep, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqhrd,bkhd->bhrqk", qf, kf) * (hd ** -0.5)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    rel = qpos - kpos
+    allow = jnp.ones((sq, skv), bool)
+    if causal:
+        allow &= rel >= 0
+    if window > 0:
+        allow &= rel < window
+    s = jnp.where(allow[None, None, None], s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.where(allow[None, None, None], p, 0.0)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bhrqk,bkhd->bqhrd", p, vf)
+    return o.reshape(b, sq, hq, hd).astype(q.dtype)

@@ -1,0 +1,98 @@
+"""Pallas TPU kernel: grouped expert FFN (fused SwiGLU) for MoE layers.
+
+After sort-based dispatch (models/moe.py) tokens sit in an (E, C, D) buffer;
+each expert's FFN is an independent (C, D) x (D, F) x (F, D) SwiGLU chain.
+The GPU approach (persistent-CTA grouped GEMM over ragged rows) doesn't map
+to TPU; instead the *fixed-capacity* buffer makes every expert a statically
+shaped matmul chain the MXU can pipeline — capacity padding buys static
+shapes, the classic TPU trade (DESIGN.md §2).
+
+Fusion: both projections and the SwiGLU product are computed per (expert,
+token-block, ff-block) grid step, and the contraction over the ff dimension
+accumulates straight into the (BC, D) f32 output tile in VMEM scratch — the
+(C, F) intermediate activation is NEVER materialized in HBM. Grid =
+(E, nC, nF), ff innermost so the accumulator tile stays resident.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_C = 128
+DEFAULT_BLOCK_F = 512
+
+
+def _gmm_kernel(x_ref, wg_ref, wi_ref, wo_ref, out_ref, acc_ref):
+    fi = pl.program_id(2)
+    n_f = pl.num_programs(2)
+
+    @pl.when(fi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)       # (BC, D)
+    wg = wg_ref[0].astype(jnp.float32)     # (D, BF)
+    wi = wi_ref[0].astype(jnp.float32)
+    wo = wo_ref[0].astype(jnp.float32)     # (BF, D)
+    g = jax.nn.silu(
+        jax.lax.dot_general(x, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    )
+    u = jax.lax.dot_general(x, wi, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] += jax.lax.dot_general(
+        g * u, wo, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(fi == n_f - 1)
+    def _finalize():
+        out_ref[0] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_c", "block_f", "interpret")
+)
+def moe_ffn_gmm(
+    buf: jax.Array,   # (E, C, D)
+    wi: jax.Array,    # (E, D, F)
+    wg: jax.Array,    # (E, D, F)
+    wo: jax.Array,    # (E, F, D)
+    *,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_f: int = DEFAULT_BLOCK_F,
+    interpret: bool = False,
+) -> jax.Array:
+    e, c, d = buf.shape
+    f = wi.shape[-1]
+    block_c = min(block_c, c)
+    block_f = min(block_f, f)
+    pad_c = (-c) % block_c
+    pad_f = (-f) % block_f
+    if pad_c:
+        buf = jnp.pad(buf, ((0, 0), (0, pad_c), (0, 0)))
+    if pad_f:
+        wi = jnp.pad(wi, ((0, 0), (0, 0), (0, pad_f)))
+        wg = jnp.pad(wg, ((0, 0), (0, 0), (0, pad_f)))
+        wo = jnp.pad(wo, ((0, 0), (0, pad_f), (0, 0)))
+    cp, fp = c + pad_c, f + pad_f
+
+    grid = (e, cp // block_c, fp // block_f)
+    out = pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, d), lambda ei, ci, fi: (ei, ci, 0)),
+            pl.BlockSpec((1, d, block_f), lambda ei, ci, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, d, block_f), lambda ei, ci, fi: (ei, 0, fi)),
+            pl.BlockSpec((1, block_f, d), lambda ei, ci, fi: (ei, fi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, d), lambda ei, ci, fi: (ei, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, cp, d), buf.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, d), jnp.float32)],
+        interpret=interpret,
+    )(buf, wg, wi, wo)
+    return out[:, :c]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the grouped expert FFN (SwiGLU) matmul.
+
+buf (E, C, D) x wi/wg (E, D, F) x wo (E, F, D) -> (E, C, D)
+out[e] = (silu(buf[e] @ wg[e]) * (buf[e] @ wi[e])) @ wo[e]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_ffn_gmm_ref(buf, wi, wg, wo):
+    x = buf.astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", x, wg.astype(jnp.float32)))
+    u = jnp.einsum("ecd,edf->ecf", x, wi.astype(jnp.float32))
+    out = jnp.einsum("ecf,efd->ecd", g * u, wo.astype(jnp.float32))
+    return out.astype(buf.dtype)

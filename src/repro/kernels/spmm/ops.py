@@ -1,0 +1,18 @@
+"""Public entrypoint for the SpMM kernel (sparse XML input layer)."""
+from __future__ import annotations
+
+import jax
+
+from .spmm import spmm as _spmm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmm(feat_idx, feat_val, feat_mask, w, block_h: int = 512):
+    """Padded-COO batch x dense W. Returns (B, H) in W's dtype."""
+    return _spmm_kernel(
+        feat_idx, feat_val, feat_mask, w,
+        block_h=block_h, interpret=not _on_tpu(),
+    )

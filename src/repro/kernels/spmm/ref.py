@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the padded-COO sparse input layer (SpMM).
+
+h[b, :] = sum_k  mask[b,k] * val[b,k] * W[idx[b,k], :]
+
+This is the gather formulation of the paper's cuSPARSE SpMM over libSVM
+batches (XML input layer). Accumulates in f32.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_ref(feat_idx, feat_val, feat_mask, w):
+    rows = w[feat_idx].astype(jnp.float32)                     # (B, K, H)
+    scale = (feat_val * feat_mask).astype(jnp.float32)[..., None]
+    return jnp.sum(rows * scale, axis=1).astype(w.dtype)       # (B, H)

@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: padded-COO batch SpMM (the paper's sparse input layer).
+
+GPU algorithm (cuSPARSE CSR SpMM) does not transfer to TPU: there is no
+sparse unit, and warp-level row decomposition has no analogue. The
+TPU-native formulation (DESIGN.md §2) is **scalar-prefetch driven row
+gather + dense accumulate**:
+
+  * ``feat_idx`` is a *scalar-prefetch* operand (SMEM): the BlockSpec
+    index_map of W reads it to drive the HBM->VMEM DMA of exactly the one
+    embedding row each grid step needs — the TPU analogue of cuSPARSE's
+    indexed loads, with the DMA pipelined by the Pallas grid.
+  * grid = (B, K, H_blocks): for sample b and nnz slot k, fetch row
+    W[idx[b,k]] one (1, block_h) tile at a time and accumulate
+    ``val * mask * row`` into out[b] in VMEM (f32). The accumulator tile is
+    revisited across the K dimension (out index_map ignores k), so it stays
+    resident in VMEM for the whole inner loop — only the W row moves.
+
+Zero-padding slots contribute 0 via the mask; idx of padded slots may be
+anything in range (the gathered row is multiplied by 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_H = 512
+
+
+def _spmm_kernel(idx_ref, scale_ref, w_ref, out_ref):
+    """Grid (B, K, nH). idx_ref is scalar-prefetched (SMEM, (B, K))."""
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    b = pl.program_id(0)
+    s = scale_ref[0, 0]                     # val*mask for (b, k), f32
+    row = w_ref[...].astype(jnp.float32)    # (1, BH) — row idx[b,k]
+    out_ref[...] += (s * row).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_h", "interpret")
+)
+def spmm(
+    feat_idx: jax.Array,    # (B, K) int32
+    feat_val: jax.Array,    # (B, K) float
+    feat_mask: jax.Array,   # (B, K) bool
+    w: jax.Array,           # (NF, H)
+    *,
+    block_h: int = DEFAULT_BLOCK_H,
+    interpret: bool = False,
+) -> jax.Array:
+    b, k = feat_idx.shape
+    nf, h = w.shape
+    block_h = min(block_h, h)
+    pad_h = (-h) % block_h
+    if pad_h:
+        w = jnp.pad(w, ((0, 0), (0, pad_h)))
+    hp = h + pad_h
+    scale = (feat_val * feat_mask).astype(jnp.float32)[..., None]  # (B, K, 1)
+
+    grid = (b, k, hp // block_h)
+
+    out = pl.pallas_call(
+        _spmm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1), lambda bi, ki, hi, idx: (bi, ki, 0)),
+                # W row selected by the prefetched index — this is the gather
+                pl.BlockSpec(
+                    (1, block_h), lambda bi, ki, hi, idx: (idx[bi, ki], hi)
+                ),
+            ],
+            out_specs=pl.BlockSpec((1, block_h), lambda bi, ki, hi, idx: (bi, hi)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hp), jnp.float32),
+        interpret=interpret,
+    )(feat_idx.astype(jnp.int32), scale, w)
+    return out[:, :h].astype(w.dtype)

@@ -1,0 +1,15 @@
+"""Public entrypoint for the SSD chunked-scan kernel."""
+from __future__ import annotations
+
+import jax
+
+from .ssd_scan import ssd_scan as _kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssd_scan(x, dA, Bm, Cm, chunk: int = 256):
+    """Chunked SSD scan. Returns (y (B,L,H,P) f32, final (B,H,P,N) f32)."""
+    return _kernel(x, dA, Bm, Cm, chunk=chunk, interpret=not _on_tpu())

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the chunked SSD scan — delegates to the model's
+reference implementation (models/mamba2.py::ssd_chunked), which is itself
+validated against a naive per-token recurrence in tests/test_models.py.
+"""
+from __future__ import annotations
+
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_scan_ref(x, dA, Bm, Cm, chunk, initial_state=None):
+    """x (B,L,H,P); dA (B,L,H); Bm/Cm (B,L,H,N). Returns (y, final_state)."""
+    return ssd_chunked(x, dA, Bm, Cm, chunk, initial_state=initial_state)

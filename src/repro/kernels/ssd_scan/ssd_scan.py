@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: Mamba2 SSD (state-space duality) chunked scan.
+
+The SSD decomposition [arXiv:2405.21060] splits the linear recurrence into
+(1) an intra-chunk quadratic part — three small matmuls that map onto the
+MXU — and (2) an inter-chunk state recurrence that is *sequential over
+chunks only*. The GPU implementation (Triton) parallelizes chunks across
+SMs and does a separate state-passing pass; on TPU we instead exploit the
+sequential grid: grid = (B, H, n_chunks) with the chunk dimension innermost,
+carrying the running (P, N) state in VMEM scratch across grid steps — the
+state never round-trips to HBM between chunks (the TPU-native equivalent of
+the GPU's cross-SM state pass, DESIGN.md §2).
+
+Per grid step, for one (batch, head, chunk):
+    a_cs    = cumsum(dA)                      # (c, 1)
+    L       = tril(exp(a_cs - a_cs^T))        # (c, c) decay kernel
+    scores  = (C @ B^T) * L                   # MXU matmul 1
+    y_diag  = scores @ x                      # MXU matmul 2
+    y_off   = (C @ state^T) * exp(a_cs)       # MXU matmul 3 (carry-in)
+    state   = state * exp(a_cs[-1]) + x^T @ (B * exp(a_cs[-1] - a_cs))
+All math f32; x/B/C tiles may be bf16 in HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, fin_ref, state_ref, *, chunk):
+    ci = pl.program_id(2)
+    n_c = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # (c, P)
+    a = a_ref[0, 0].astype(jnp.float32)      # (c, 1)
+    bm = b_ref[0, 0].astype(jnp.float32)     # (c, N)
+    cm = c_ref[0, 0].astype(jnp.float32)     # (c, N)
+
+    a_cs = jnp.cumsum(a, axis=0)             # (c, 1) inclusive
+    # segment-sum decay kernel: L[i,j] = exp(sum_{j<k<=i} a_k), lower-tri
+    seg = a_cs - a_cs.reshape(1, chunk)      # (c, c) = cs[i] - cs[j]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * L                                     # (c, c)
+    y = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (c, P)
+
+    # inter-chunk contribution from the carried state
+    state = state_ref[...]                    # (P, N)
+    y_off = jax.lax.dot_general(
+        cm, state, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(a_cs)                         # (c, P)
+    y_ref[0, 0] = (y + y_off).astype(y_ref.dtype)
+
+    # state update: decay whole chunk + inject B-weighted inputs
+    total = a_cs[chunk - 1]                   # (1,)
+    decay_in = jnp.exp(total.reshape(1, 1) - a_cs)  # (c, 1)
+    xw = x * decay_in                         # (c, P)
+    new_state = state * jnp.exp(total)[0] + jax.lax.dot_general(
+        xw, bm, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                         # (P, N)
+    state_ref[...] = new_state
+
+    @pl.when(ci == n_c - 1)
+    def _fin():
+        fin_ref[0, 0] = new_state
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,    # (B, L, H, P) — dt-discretized inputs (x * dt)
+    dA: jax.Array,   # (B, L, H)    — dt * A
+    Bm: jax.Array,   # (B, L, H, N)
+    Cm: jax.Array,   # (B, L, H, N)
+    *,
+    chunk: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,L,H,P) f32, final_state (B,H,P,N) f32)."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+
+    # head-major layout so each (b, h, chunk) tile is contiguous
+    xt = x.transpose(0, 2, 1, 3)                      # (B, H, L, P)
+    at = dA.transpose(0, 2, 1)[..., None]             # (B, H, L, 1)
+    bt = Bm.transpose(0, 2, 1, 3)                     # (B, H, L, N)
+    ct = Cm.transpose(0, 2, 1, 3)
+
+    grid = (b, h, nc)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, fin = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, hi, ci: (bi, hi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, p), lambda bi, hi, ci: (bi, hi, ci, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, at, bt, ct)
+    return y.transpose(0, 2, 1, 3), fin

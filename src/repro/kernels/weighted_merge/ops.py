@@ -1,0 +1,43 @@
+"""Public entrypoint for the weighted-merge kernel.
+
+``merge(replicas, alphas, ...)`` dispatches to the Pallas kernel on TPU and
+to interpret mode elsewhere (CPU CI): the kernel *body* runs in Python either
+way, so correctness is validated on every platform. ``merge_pytree`` applies
+the kernel leaf-wise over a replica-stacked param pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .weighted_merge import weighted_merge
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def merge(replicas, alphas, g=None, gp=None, gamma: float = 0.0, block_n=2048):
+    """replicas (R, N); alphas (R,). Returns merged (N,)."""
+    return weighted_merge(
+        replicas, alphas, g, gp, gamma,
+        block_n=block_n, interpret=not _on_tpu(),
+    )
+
+
+def merge_pytree(replica_tree, alphas, global_tree=None, prev_tree=None,
+                 gamma: float = 0.0):
+    """Leaf-wise Algorithm-2 merge over a pytree whose leaves carry a leading
+    replica dim R. Leaves are flattened to (R, N) for the kernel and reshaped
+    back. Returns a pytree shaped like one replica."""
+    def leaf(x, g=None, gp=None):
+        r = x.shape[0]
+        flat = x.reshape(r, -1)
+        gf = g.reshape(-1) if g is not None else None
+        gpf = gp.reshape(-1) if gp is not None else None
+        out = merge(flat, alphas, gf, gpf, gamma)
+        return out.reshape(x.shape[1:])
+
+    if global_tree is not None and gamma != 0.0:
+        return jax.tree_util.tree_map(leaf, replica_tree, global_tree, prev_tree)
+    return jax.tree_util.tree_map(lambda x: leaf(x), replica_tree)

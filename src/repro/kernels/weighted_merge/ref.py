@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the weighted model merge (Algorithm 2, line 11).
+
+out = sum_r alphas[r] * replicas[r]  (+ gamma * (g - gp) when provided)
+
+Shapes: replicas (R, N) — the framework flattens each param leaf to 1-D and
+concatenates; the kernel operates on flat chunks.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_merge_ref(replicas, alphas, g=None, gp=None, gamma: float = 0.0):
+    acc = jnp.einsum(
+        "r,rn->n", alphas.astype(jnp.float32), replicas.astype(jnp.float32)
+    )
+    if g is not None and gamma != 0.0:
+        acc = acc + gamma * (g.astype(jnp.float32) - gp.astype(jnp.float32))
+    return acc.astype(replicas.dtype)

@@ -1,0 +1,408 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (deliverable e).
+
+For every (architecture x input-shape x mesh) combination: lower + compile
+the appropriate step (train_round / prefill / decode, plus the Algorithm-2
+merge step for train shapes) against ShapeDtypeStruct inputs on the
+production mesh, print memory_analysis()/cost_analysis(), and dump the
+roofline raw terms (HLO FLOPs, bytes, per-collective bytes parsed from the
+post-SPMD HLO) as JSON for benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun                    # everything
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.archs import ARCHS
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    make_decode_step, make_merge_step, make_prefill_step, make_train_round,
+)
+from repro.models import model as MDL
+from repro.sharding.annotate import sharding_context
+from repro.sharding.rules import (
+    MeshAxes, param_specs, serve_specs, to_named, train_batch_specs,
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        total += numel * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum result bytes of every collective op in post-SPMD HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w]+\[[\d,]*\][^ ]*)\s+([\w\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalize variants like all-reduce-start / all-gather-done
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                base = c
+                break
+        if base is None:
+            continue
+        out[base] += _shape_bytes(m.group(1))
+        counts[base] += 1
+    return {"bytes": out, "counts": counts}
+
+
+def _with_replica_dim(tree, r: int):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((r,) + tuple(s.shape), s.dtype), tree
+    )
+
+
+def _param_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: MDL.init(cfg, k), jax.random.PRNGKey(0))
+
+
+def lower_combo(cfg: ModelConfig, shape: InputShape, mesh, verbose: bool = True) -> dict:
+    """Lower + compile every step relevant to (cfg, shape) on mesh."""
+    ax = MeshAxes(cfg, mesh)
+    results = {}
+    with sharding_context(mesh, ax.activation_rules()):
+        pshapes = _param_shapes(cfg)
+
+        if shape.mode == "train":
+            r = ax.n_replicas
+            assert shape.global_batch % r == 0, (shape.global_batch, r)
+            b_rep = shape.global_batch // r
+            replicas = _with_replica_dim(pshapes, r)
+            batch = _with_replica_dim(SP.train_specs(cfg, b_rep, shape.seq_len), r)
+            rep_sharding = to_named(param_specs(cfg, replicas, mesh, with_replica_dim=True), mesh)
+            batch_sharding = to_named(train_batch_specs(cfg, batch, mesh), mesh)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            vec = jax.ShapeDtypeStruct((r,), jnp.float32)
+            vec_sh = NamedSharding(mesh, P(ax.replica))
+
+            step = make_train_round(cfg)
+            results["train"] = _lower_and_analyze(
+                step,
+                (replicas, batch, vec, vec),
+                in_shardings=(rep_sharding, batch_sharding, vec_sh, vec_sh),
+                out_shardings=(rep_sharding, None),
+                mesh=mesh,
+                step_name="train",
+            )
+
+            # Algorithm-2 merge (the paper's all-reduce model merging)
+            keep_global = cfg.replica_axis != "pod"  # memory-lean for huge archs
+            merge = make_merge_step(cfg, keep_global=keep_global)
+            g_sharding = to_named(param_specs(cfg, pshapes, mesh), mesh)
+            if keep_global:
+                args = (replicas, vec, pshapes, pshapes)
+                in_sh = (rep_sharding, vec_sh, g_sharding, g_sharding)
+                out_sh = (g_sharding, rep_sharding)
+            else:
+                args = (replicas, vec)
+                in_sh = (rep_sharding, vec_sh)
+                out_sh = rep_sharding
+            results["merge"] = _lower_and_analyze(
+                merge, args, in_shardings=in_sh, out_shardings=out_sh,
+                mesh=mesh, step_name="merge",
+            )
+
+        elif shape.mode == "prefill":
+            batch = SP.prefill_specs(cfg, shape.global_batch, shape.seq_len)
+            p_sh = to_named(param_specs(cfg, pshapes, mesh), mesh)
+            b_sh = to_named(serve_specs(cfg, batch, mesh), mesh)
+            step = make_prefill_step(cfg)
+            with sharding_context(mesh, ax.serve_rules()):
+                results["prefill"] = _lower_and_analyze(
+                    step, (pshapes, batch), in_shardings=(p_sh, b_sh),
+                    out_shardings=None, mesh=mesh, step_name="prefill",
+                )
+
+        else:  # decode
+            window = SP.decode_window(cfg, shape)
+            ins = SP.decode_specs(cfg, shape.global_batch, shape.seq_len, window)
+            p_sh = to_named(param_specs(cfg, pshapes, mesh), mesh)
+            c_sh = to_named(serve_specs(cfg, ins["cache"], mesh), mesh)
+            t_sh = to_named(serve_specs(cfg, {"tokens": ins["tokens"]}, mesh), mesh)["tokens"]
+            step = make_decode_step(cfg, window)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            multi_pod = "pod" in mesh.shape
+            bat = ("pod", "data") if multi_pod else "data"
+            if shape.global_batch % (2 if multi_pod else 1) or shape.global_batch % 16:
+                bat = None  # long_500k B=1: logits replicated
+            logits_sh = NamedSharding(mesh, P(bat, None, None))
+            with sharding_context(mesh, ax.serve_rules()):
+                results["decode"] = _lower_and_analyze(
+                    step,
+                    (pshapes, ins["cache"], ins["tokens"]),
+                    in_shardings=(p_sh, c_sh, t_sh),
+                    out_shardings=(logits_sh, c_sh),
+                    mesh=mesh,
+                    step_name="decode",
+                )
+    return results
+
+
+HLO_ARCHIVE: dict = {"dir": None, "tag": None}  # set by main() per combo
+
+
+def _archive_hlo(hlo: str, step_name: str) -> None:
+    """zstd-compress the post-SPMD HLO so analysis passes can be re-run
+    offline without recompiling (results/hlo/<tag>__<step>.hlo.zst)."""
+    if HLO_ARCHIVE["dir"] is None:
+        return
+    import zstandard as zstd
+
+    os.makedirs(HLO_ARCHIVE["dir"], exist_ok=True)
+    path = os.path.join(
+        HLO_ARCHIVE["dir"], f"{HLO_ARCHIVE['tag']}__{step_name}.hlo.zst"
+    )
+    with open(path, "wb") as f:
+        f.write(zstd.ZstdCompressor(level=9).compress(hlo.encode()))
+
+
+def _lower_and_analyze(fn, args, in_shardings, out_shardings, mesh,
+                       step_name: str = "step") -> dict:
+    from repro.launch.hlo_analysis import analyze
+
+    t0 = time.perf_counter()
+    jitted = jax.jit(fn, in_shardings=in_shardings, out_shardings=out_shardings)
+    with mesh:
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    t1 = time.perf_counter()
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    _archive_hlo(hlo, step_name)
+    rolled = analyze(hlo)  # while-trip-count-corrected per-device costs
+    mem_d = {}
+    if mem is not None:
+        for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            if hasattr(mem, k):
+                mem_d[k] = int(getattr(mem, k))
+    return {
+        # rolled-up (trip-count-corrected) per-device terms
+        "flops": float(rolled.flops),
+        "hbm_bytes": float(rolled.hbm_bytes),
+        "collectives": {
+            "bytes": rolled.collective_bytes,
+            "counts": rolled.collective_counts,
+        },
+        # raw XLA numbers (while bodies counted once) for cross-check
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+        "transcendentals": float(cost.get("transcendentals", 0.0)),
+        "memory": mem_d,
+        "compile_s": t1 - t0,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+    }
+
+
+def model_flops_per_token(cfg: ModelConfig) -> float:
+    """6*N(_active) analytic FLOPs per token (roofline MODEL_FLOPS term)."""
+    d = cfg.d_model
+    n_active = cfg.vocab_size * d  # embed+unembed counted once
+    for i in range(cfg.n_layers):
+        if cfg.layer_kind(i) == "attn":
+            hd = cfg.resolved_head_dim
+            n_active += d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2
+        else:
+            d_inner = cfg.ssm_expand * d
+            n_active += d * (2 * d_inner + 2 * cfg.ssm_state + d_inner // cfg.ssm_head_dim)
+            n_active += d_inner * d
+        if cfg.ffn_kind(i) == "moe":
+            n_active += cfg.top_k * 3 * d * cfg.d_ff
+            if cfg.dense_residual:
+                n_active += 3 * d * cfg.dense_residual_ff
+        elif cfg.d_ff:
+            n_active += 3 * d * cfg.d_ff
+    for _ in range(cfg.encoder_layers):
+        hd = cfg.resolved_head_dim
+        n_active += d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2 + 3 * d * cfg.d_ff
+    return 6.0 * n_active
+
+
+def total_params(cfg: ModelConfig) -> float:
+    shapes = jax.eval_shape(lambda k: MDL.init(cfg, k), jax.random.PRNGKey(0))
+    return float(sum(np.prod(l.shape) for l in jax.tree_util.tree_leaves(shapes)))
+
+
+def reanalyze(out_dir: str, hlo_dir: str) -> None:
+    """Re-run the HLO roll-up on archived HLO and patch the stored JSONs
+    (no recompilation needed)."""
+    import zstandard as zstd
+
+    from repro.launch.hlo_analysis import analyze
+
+    for fn in sorted(os.listdir(hlo_dir)):
+        if not fn.endswith(".hlo.zst"):
+            continue
+        tag_step = fn[: -len(".hlo.zst")]
+        tag, step_name = tag_step.rsplit("__", 1)
+        jpath = os.path.join(out_dir, tag + ".json")
+        if not os.path.exists(jpath):
+            continue
+        with open(os.path.join(hlo_dir, fn), "rb") as f:
+            hlo = zstd.ZstdDecompressor().decompress(f.read()).decode()
+        rolled = analyze(hlo)
+        with open(jpath) as f:
+            rec = json.load(f)
+        step = rec["steps"].get(step_name)
+        if step is None:
+            continue
+        step["flops"] = float(rolled.flops)
+        step["hbm_bytes"] = float(rolled.hbm_bytes)
+        step["collectives"] = {
+            "bytes": rolled.collective_bytes,
+            "counts": rolled.collective_counts,
+        }
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[reanalyzed] {tag_step}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all", help="arch id or 'all'")
+    ap.add_argument("--shape", default="all", help="input shape or 'all'")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--hlo-dir", default="results/hlo",
+                    help="archive zstd-compressed post-SPMD HLO here ('' = off)")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true",
+                    help="re-run HLO analysis from archived HLO, no compile")
+    ap.add_argument("--moe-dispatch", default="",
+                    choices=["", "global", "sharded"],
+                    help="override cfg.moe_dispatch (perf experiments)")
+    ap.add_argument("--moe-combine-dtype", default="",
+                    choices=["", "f32", "bf16"],
+                    help="override cfg.moe_combine_dtype (perf experiments)")
+    ap.add_argument("--moe-decode-gather", action="store_true",
+                    help="decode-time expert-gather FFN (perf experiments)")
+    ap.add_argument("--remat", default="",
+                    choices=["", "on", "off"],
+                    help="override cfg.remat (perf experiments)")
+    ap.add_argument("--remat-policy", default="",
+                    choices=["", "full", "dots"],
+                    help="override cfg.remat_policy (perf experiments)")
+    ap.add_argument("--tag-suffix", default="",
+                    help="suffix for result filenames (perf experiments)")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze(args.out, args.hlo_dir)
+        return
+
+    archs = list(ARCHS) if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for multi_pod in meshes:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mtag = "multipod" if multi_pod else "singlepod"
+        for arch in archs:
+            cfg = ARCHS[arch]
+            import dataclasses
+            if args.moe_dispatch:
+                cfg = dataclasses.replace(cfg, moe_dispatch=args.moe_dispatch)
+            if args.moe_combine_dtype:
+                cfg = dataclasses.replace(
+                    cfg, moe_combine_dtype=args.moe_combine_dtype)
+            if args.remat:
+                cfg = dataclasses.replace(cfg, remat=args.remat == "on")
+            if args.moe_decode_gather:
+                cfg = dataclasses.replace(cfg, moe_decode_gather=True)
+            if args.remat_policy:
+                cfg = dataclasses.replace(cfg, remat_policy=args.remat_policy)
+            for shape_name in shapes:
+                shape = INPUT_SHAPES[shape_name]
+                tag = f"{arch}__{shape_name}__{mtag}{args.tag_suffix}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip] {tag}")
+                    continue
+                HLO_ARCHIVE["dir"] = args.hlo_dir or None
+                HLO_ARCHIVE["tag"] = tag
+                t0 = time.perf_counter()
+                try:
+                    res = lower_combo(cfg, shape, mesh)
+                    record = {
+                        "arch": arch,
+                        "shape": shape_name,
+                        "mesh": mtag,
+                        "mesh_shape": dict(mesh.shape),
+                        "steps": res,
+                        "model_flops_per_token": model_flops_per_token(cfg),
+                        "total_params": total_params(cfg),
+                        "tokens_per_step": shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1),
+                        "mode": shape.mode,
+                    }
+                    with open(path, "w") as f:
+                        json.dump(record, f, indent=1)
+                    dt = time.perf_counter() - t0
+                    step = next(iter(res.values()))
+                    print(
+                        f"[ok] {tag} compile={dt:.1f}s flops={step['flops']:.3g} "
+                        f"coll={sum(step['collectives']['bytes'].values()):.3g}B"
+                    )
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+        raise SystemExit(1)
+    print("\nAll dry-run combinations lowered and compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Post-SPMD HLO text analyzer with while-loop trip-count roll-up.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, but our
+models run layers under ``lax.scan`` — so FLOPs/collective-bytes must be
+multiplied by trip counts. This module parses the post-optimization HLO
+text into a computation call graph, counts per-computation dot FLOPs and
+collective result bytes, extracts while trip counts from loop conditions,
+and rolls everything up to the entry computation.
+
+Used by benchmarks/roofline.py (reads the dry-run's stored HLO) and by the
+dry-run itself for the per-device roofline terms.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_ONE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_HEAD = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_ARRAY_TYPE = re.compile(r"^(\w+\[[\d,]*\]\S*)\s+(.*)$")
+_OP_NAME = re.compile(r"^([\w\-]+)[(.]")
+
+
+def _split_instr(line: str):
+    """Parse `%name = TYPE op(...)...` robustly (tuple types may contain
+    `/*index=N*/` comments). Returns (name, type_str, op, rest) or None."""
+    m = _INSTR_HEAD.match(line)
+    if not m:
+        return None
+    name, rhs = m.group(1), m.group(2)
+    if rhs.startswith("("):  # tuple type: scan to the balanced close paren
+        depth = 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    tstr, rest = rhs[: i + 1], rhs[i + 1 :].lstrip()
+                    break
+        else:
+            return None
+    else:
+        ma = _ARRAY_TYPE.match(rhs)
+        if not ma:
+            return None
+        tstr, rest = ma.group(1), ma.group(2)
+    mo = _OP_NAME.match(rest)
+    if not mo:
+        return None
+    return name, tstr, mo.group(1), rest
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"\(([^)]*)\)")
+
+
+def shape_numel_bytes(type_str: str) -> tuple[int, int]:
+    """Total (numel, bytes) across all array shapes in a type string."""
+    numel_total, bytes_total = 0, 0
+    for dt, dims in _SHAPE_ONE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        numel = 1
+        if dims:
+            for d in dims.split(","):
+                numel *= int(d)
+        numel_total += numel
+        bytes_total += numel * _DTYPE_BYTES[dt]
+    return numel_total, bytes_total
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)  # (name, type_str, op, rest)
+    shapes: dict = field(default_factory=dict)  # instr name -> type str
+
+
+def parse_computations(hlo: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        # computation header: `%name (args) -> type {`  or `ENTRY %name ...{`
+        if not line.startswith(" ") and s.endswith("{"):
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{$", s)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                continue
+        if s == "}" and not line.startswith("  "):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        parsed = _split_instr(line)
+        if parsed:
+            name, tstr, op, rest = parsed
+            cur.instrs.append((name, tstr, op, rest))
+            cur.shapes[name] = tstr
+    return comps
+
+
+def _dot_flops(comp: Computation, name: str, tstr: str, rest: str) -> float:
+    """FLOPs of a dot: 2 * numel(result) * contracted_dim_size."""
+    out_numel, _ = shape_numel_bytes(tstr)
+    # operand names
+    ops = _OPERANDS.search(rest.split(" dot(")[-1] if " dot(" in rest else rest)
+    lhs_shape = None
+    m = re.search(r"dot\(\s*%?([\w.\-]+)", rest)
+    if m:
+        lhs_shape = comp.shapes.get(m.group(1))
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    k = 1
+    if lhs_shape and mc and mc.group(1):
+        dims_m = _SHAPE_ONE.search(lhs_shape)
+        if dims_m and dims_m.group(2):
+            dims = [int(d) for d in dims_m.group(2).split(",")]
+            for ci in mc.group(1).split(","):
+                ci = int(ci)
+                if ci < len(dims):
+                    k *= dims[ci]
+    return 2.0 * out_numel * k
+
+
+_KNOWN_TRIPS = re.compile(r"known_trip_count[^0-9]*(\d+)")
+
+
+def _trip_count(comps: dict, cond_name: str, while_rest: str = "") -> int:
+    """Prefer XLA's known_trip_count backend_config on the while op;
+    fall back to the largest integer constant in the loop condition."""
+    m = _KNOWN_TRIPS.search(while_rest)
+    if m:
+        return max(int(m.group(1)), 1)
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for _, _, op, rest in cond.instrs:
+        if op == "constant":
+            m = re.search(r"constant\((-?\d+)\)", rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return max(best, 1)
+
+
+@dataclass
+class Costs:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0  # operand+result bytes of top-level kernels
+    collective_bytes: dict = field(default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    collective_counts: dict = field(default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+
+    def add(self, other: "Costs", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for c in COLLECTIVES:
+            self.collective_bytes[c] += other.collective_bytes[c] * mult
+            self.collective_counts[c] += other.collective_counts[c] * mult
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# ops that move no HBM bytes themselves (views / metadata / control)
+_NO_TRAFFIC = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "while",
+    "conditional", "call",
+}
+
+_OPERAND_NAMES = re.compile(r"%([\w.\-]+)")
+
+
+def _instr_bytes(comp: Computation, tstr: str, op: str, rest: str) -> float:
+    """HBM traffic model: each scheduled top-level kernel reads its operands
+    and writes its result (fusion-internal traffic excluded by construction).
+
+    dynamic-update-slice executes in place on TPU (XLA aliases the base
+    buffer): traffic = read update + write the updated region, NOT a full
+    copy of the base operand — critical for decode steps, whose KV-cache
+    updates would otherwise dominate the term spuriously. ``copy`` of loop
+    carries is likewise elided by layout assignment; counted at result size
+    only (conservative)."""
+    if op in _NO_TRAFFIC:
+        return 0.0
+    if op == "dynamic-update-slice":
+        m = re.search(r"dynamic-update-slice\(\s*%?[\w.\-]+,\s*%?([\w.\-]+)", rest)
+        if m:
+            shp = comp.shapes.get(m.group(1))
+            if shp:
+                _, ub = shape_numel_bytes(shp)
+                return 2.0 * ub
+        _, out_b = shape_numel_bytes(tstr)
+        return float(out_b)
+    if op == "copy":
+        _, out_b = shape_numel_bytes(tstr)
+        return float(out_b)
+    _, out_b = shape_numel_bytes(tstr)
+    total = float(out_b)
+    idx = rest.find(op + "(")
+    if idx >= 0:
+        depth = 0
+        args = ""
+        for ch in rest[idx + len(op):]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if depth >= 1:
+                args += ch
+        for name in _OPERAND_NAMES.findall(args):
+            shp = comp.shapes.get(name)
+            if shp:
+                _, b = shape_numel_bytes(shp)
+                total += b
+    return total
+
+
+def analyze(hlo: str) -> Costs:
+    comps = parse_computations(hlo)
+    memo: dict[str, Costs] = {}
+
+    def cost_of(name: str, stack=()) -> Costs:
+        if name in memo:
+            return memo[name]
+        if name in stack:  # recursion guard
+            return Costs()
+        comp = comps.get(name)
+        c = Costs()
+        if comp is None:
+            return c
+        for iname, tstr, op, rest in comp.instrs:
+            c.hbm_bytes += _instr_bytes(comp, tstr, op, rest)
+            if op == "dot":
+                c.flops += _dot_flops(comp, iname, tstr, rest)
+            elif op == "while":
+                mb = _BODY.search(rest)
+                mc = _COND.search(rest)
+                trips = _trip_count(comps, mc.group(1) if mc else "", rest)
+                if mb:
+                    c.add(cost_of(mb.group(1), stack + (name,)), mult=trips)
+            elif op in ("fusion", "call", "custom-call", "reduce", "map", "sort", "scatter", "select-and-scatter"):
+                m = _CALLS.search(rest)
+                if m and m.group(1) in comps:
+                    # fused computations: count FLOPs/collectives of the body,
+                    # but NOT its internal byte traffic (the fusion op's own
+                    # operand/result bytes above are the real HBM traffic).
+                    sub = cost_of(m.group(1), stack + (name,))
+                    sub_nb = Costs(
+                        flops=sub.flops,
+                        hbm_bytes=0.0,
+                        collective_bytes=dict(sub.collective_bytes),
+                        collective_counts=dict(sub.collective_counts),
+                    )
+                    c.add(sub_nb)
+            elif op == "conditional":
+                for m in re.finditer(r"(?:branch_computations=\{([^}]*)\}|(?:true|false)_computation=%?([\w.\-]+))", rest):
+                    names = (m.group(1) or m.group(2) or "").replace("%", "").split(",")
+                    for n in names:
+                        n = n.strip()
+                        if n in comps:
+                            c.add(cost_of(n, stack + (name,)))
+            else:
+                base = None
+                for col in COLLECTIVES:
+                    if op == col or op.startswith(col + "-start"):
+                        base = col
+                        break
+                if base:
+                    _, b = shape_numel_bytes(tstr)
+                    c.collective_bytes[base] += b
+                    c.collective_counts[base] += 1
+        memo[name] = c
+        return c
+
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo, re.MULTILINE)
+    if m:
+        entry = m.group(1)
+    else:  # fall back to the last computation
+        entry = list(comps)[-1] if comps else ""
+    return cost_of(entry)

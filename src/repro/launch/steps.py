@@ -1,0 +1,75 @@
+"""Jittable step functions for the production launcher + dry-run.
+
+  * ``train_round``  — one lockstep elastic round: per-replica forward/
+    backward + masked SGD update (paper's local updates; plain SGD — the
+    momentum of Algorithm 2 lives at the global-model level in merge_step).
+  * ``merge_step``   — Algorithm 2's weighted merge across the replica dim
+    (the paper's all-reduce model merging) + replica reset broadcast.
+  * ``prefill_step`` / ``decode_step`` — serving paths (no replica dim).
+
+All take/return pytrees whose leading replica dim R is sharded over the
+replica mesh axis; sharding is supplied by the caller via jit shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import adaptive_sgd as asgd
+from repro.models import model as MDL
+from repro.optim.sgd import SGDConfig, sgd_update
+from repro.utils import tree as tu
+
+
+def make_train_round(cfg: ModelConfig, sgd_cfg: SGDConfig = SGDConfig()):
+    def loss_fn(params, batch):
+        return MDL.loss_fn(cfg, params, batch)
+
+    def train_round(replicas, batch, lr_vec, update_mask):
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        (loss, aux), grads = jax.vmap(grad_fn)(replicas, batch)
+        new_replicas, _ = sgd_update(
+            replicas, grads, lr_vec, sgd_cfg,
+            update_mask=update_mask, replica_dim=True,
+        )
+        return new_replicas, {"loss": loss, "accuracy": aux["accuracy"]}
+
+    return train_round
+
+
+def make_merge_step(cfg: ModelConfig, gamma: float = 0.9, keep_global: bool = True):
+    """Algorithm 2 merge. keep_global=False = paper §4 memory-lean mode
+    (no w̄/w̄_p copies; required for the ≥398B archs)."""
+
+    if keep_global:
+        def merge_step(replicas, alphas, global_model, prev_global):
+            new_global = asgd.normalized_merge(
+                replicas, alphas, global_model, prev_global, gamma
+            )
+            R = jax.tree_util.tree_leaves(replicas)[0].shape[0]
+            return new_global, tu.tree_broadcast_replicas(new_global, R)
+    else:
+        def merge_step(replicas, alphas):
+            new_global = asgd.normalized_merge(replicas, alphas, None, None, 0.0)
+            R = jax.tree_util.tree_leaves(replicas)[0].shape[0]
+            return tu.tree_broadcast_replicas(new_global, R)
+
+    return merge_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return MDL.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, window: int = 0):
+    def decode_step(params, cache, tokens):
+        return MDL.decode_step(cfg, params, cache, tokens, window=window)
+
+    return decode_step

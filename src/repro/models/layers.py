@@ -1,0 +1,316 @@
+"""Shared transformer layers: RMSNorm, RoPE, GQA attention (full / sliding /
+blockwise-online-softmax), SwiGLU MLP, embeddings.
+
+Everything is a pure function over explicit param dicts (no framework
+module system) so the elastic trainer can vmap over the replica dim and the
+launcher can assign PartitionSpecs by param-path name.
+
+Attention paths (both grouped-query native: repeated KV heads are NEVER
+materialized — q is reshaped to (B, S, Hkv, rep, hd) and contracted against
+the raw KV, which keeps the KV cache un-duplicated and un-allgathered):
+  * ``blockwise_attention`` — chunked online-softmax (flash-style) in pure
+    jnp; memory O(S·chunk) instead of O(S²). Used for train/prefill.
+    The Pallas ``flash_attention`` kernel is the TPU-optimized drop-in.
+  * ``decode_attention``    — one-token query against a KV cache.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.annotate import shard
+
+# --------------------------------------------------------------------------
+# init helpers
+# --------------------------------------------------------------------------
+
+
+def ninit(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gain: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + gain.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: (..., S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+def init_attention(key, d_model: int, n_heads: int, n_kv: int, head_dim: int, dtype):
+    kq, kk, kv, ko = split_keys(key, 4)
+    s = d_model ** -0.5
+    return {
+        "wq": ninit(kq, (d_model, n_heads, head_dim), s, dtype),
+        "wk": ninit(kk, (d_model, n_kv, head_dim), s, dtype),
+        "wv": ninit(kv, (d_model, n_kv, head_dim), s, dtype),
+        "wo": ninit(ko, (n_heads, head_dim, d_model), (n_heads * head_dim) ** -0.5, dtype),
+        "norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def blockwise_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    kv_seq_mask: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Online-softmax chunked attention, grouped-query native.
+
+    q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) with Hq % Hkv == 0.
+    window > 0 = sliding-window causal attention (token i attends to
+    [i-window+1, i]). Returns (B, Sq, Hq, hd).
+    """
+    b, sq, hq, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    if sq % q_chunk:
+        q_chunk = sq
+    if skv % kv_chunk:
+        kv_chunk = skv
+    nq, nkv = sq // q_chunk, skv // kv_chunk
+    scale = hd ** -0.5
+
+    # (nq, B, Hkv, rep, qc, hd)
+    qc = q.reshape(b, nq, q_chunk, hkv, rep, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, nkv, kv_chunk, hkv, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nkv, kv_chunk, hkv, hd).transpose(1, 0, 3, 2, 4)
+    if kv_seq_mask is not None:
+        mc = kv_seq_mask.reshape(b, nkv, kv_chunk).transpose(1, 0, 2)  # (nkv,B,kvc)
+    else:
+        mc = jnp.ones((nkv, b, kv_chunk), bool)
+
+    q_pos = jnp.arange(sq).reshape(nq, q_chunk)
+    kv_pos = jnp.arange(skv).reshape(nkv, kv_chunk)
+
+    def per_q_chunk(carry, qi):
+        q_i, qp = qi  # (B,Hkv,rep,qc,hd), (qc,)
+
+        def per_kv_chunk(state, kj):
+            acc, m, l = state
+            k_j, v_j, kp, msk = kj  # (B,Hkv,kvc,hd), ..., (kvc,), (B,kvc)
+            s = jnp.einsum(
+                "bhrqd,bhkd->bhrqk",
+                q_i.astype(jnp.float32),
+                k_j.astype(jnp.float32),
+            ) * scale
+            allow = msk[:, None, None, None, :]  # (B,1,1,1,kvc)
+            rel = qp[:, None] - kp[None, :]  # (qc, kvc)
+            if causal:
+                allow = jnp.logical_and(allow, (rel >= 0)[None, None, None])
+            if window > 0:
+                allow = jnp.logical_and(allow, (rel < window)[None, None, None])
+            s = jnp.where(allow, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)  # fully-masked rows
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(allow, p, 0.0)
+            corr = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhrqk,bhkd->bhrqd", p, v_j.astype(jnp.float32)
+            )
+            return (acc_new, m_new, l_new), None
+
+        init = (
+            jnp.zeros((b, hkv, rep, q_chunk, hd), jnp.float32),
+            jnp.full((b, hkv, rep, q_chunk), -jnp.inf),
+            jnp.zeros((b, hkv, rep, q_chunk), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(per_kv_chunk, init, (kc, vc, kv_pos, mc))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out
+
+    _, out = jax.lax.scan(per_q_chunk, None, (qc, q_pos))  # (nq,B,Hkv,rep,qc,hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def attention_layer(
+    params: dict,
+    x: jax.Array,
+    *,
+    n_rep: int,
+    rope_theta: float,
+    causal: bool = True,
+    window: int = 0,
+    positions: Optional[jax.Array] = None,
+    kv_seq_mask: Optional[jax.Array] = None,
+    norm_eps: float = 1e-5,
+    q_chunk: int = 512,
+    kv_chunk: int = 512,
+    cross_kv: Optional[tuple] = None,
+    use_flash: bool = False,
+) -> jax.Array:
+    """Pre-norm attention block: x + attn(norm(x)). x: (B, S, D)."""
+    b, s, _ = x.shape
+    h = rmsnorm(x, params["norm"], norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"])
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", h, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, params["wv"])
+        if positions is None:
+            positions = jnp.arange(s)
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = cross_kv  # precomputed encoder memory (B, Senc, Hkv, hd)
+        causal = False
+    q = shard(q, "replica", "batch", "seq", "heads", None)
+    if use_flash and kv_seq_mask is None:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        o = flash_attention(
+            q, k, v, causal=causal, window=window,
+            block_q=min(q_chunk, 128), block_k=min(kv_chunk, 128),
+        )
+    else:
+        o = blockwise_attention(
+            q, k, v, causal=causal, window=window,
+            q_chunk=q_chunk, kv_chunk=kv_chunk, kv_seq_mask=kv_seq_mask,
+        )
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return x + out
+
+
+def decode_attention(
+    params: dict,
+    x: jax.Array,
+    cache_k: jax.Array,
+    cache_v: jax.Array,
+    cur_len: jax.Array,
+    *,
+    n_rep: int,
+    rope_theta: float,
+    window: int = 0,
+    norm_eps: float = 1e-5,
+    cross: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token decode. x: (B, 1, D); cache_k/v: (B, S, Hkv, hd).
+
+    Grouped-query native: the cache is never head-repeated. Returns
+    (out, new_cache_k, new_cache_v). ``cur_len`` (scalar int) is the number
+    of valid cache entries before this token. With ``window``>0 the cache is
+    a rolling buffer of size S=window (position wraps).
+    """
+    b, _, _ = x.shape
+    s_cache, hkv = cache_k.shape[1], cache_k.shape[2]
+    h = rmsnorm(x, params["norm"], norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"])  # (B,1,Hq,hd)
+    if not cross:
+        k = jnp.einsum("bsd,dhk->bshk", h, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, params["wv"])
+        pos = jnp.full((b, 1), cur_len, jnp.int32)
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+        slot = cur_len % s_cache if window > 0 else cur_len
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    hq = q.shape[2]
+    rep = hq // hkv
+    qg = q.reshape(b, hkv, rep, q.shape[-1])  # (B,Hkv,rep,hd); Sq==1 folded out
+    qg = shard(qg, "batch", None, None, None)
+    scale = q.shape[-1] ** -0.5
+    # accumulate in f32 via preferred_element_type — never casts the cache
+    s = jnp.einsum(
+        "bhrk,bshk->bhrs", qg, cache_k, preferred_element_type=jnp.float32
+    ) * scale
+    idx = jnp.arange(s_cache)
+    if cross:
+        valid = jnp.ones((s_cache,), bool)
+    else:
+        n_valid = jnp.minimum(cur_len + 1, s_cache)
+        valid = idx < n_valid
+    s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(cache_v.dtype)
+    o = jnp.einsum("bhrs,bshk->bhrk", p, cache_v, preferred_element_type=jnp.float32)
+    o = o.reshape(b, 1, hq, q.shape[-1]).astype(x.dtype)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return x + out, cache_k, cache_v
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU)
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "wi": ninit(k1, (d_model, d_ff), d_model ** -0.5, dtype),
+        "wg": ninit(k2, (d_model, d_ff), d_model ** -0.5, dtype),
+        "wo": ninit(k3, (d_ff, d_model), d_ff ** -0.5, dtype),
+        "norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def mlp_layer(params: dict, x: jax.Array, norm_eps: float = 1e-5) -> jax.Array:
+    h = rmsnorm(x, params["norm"], norm_eps)
+    g = jax.nn.silu(jnp.einsum("bsd,df->bsf", h, params["wg"]))
+    u = jnp.einsum("bsd,df->bsf", h, params["wi"])
+    ff = shard(g * u, "replica", "batch", "seq", "ff")
+    out = jnp.einsum("bsf,fd->bsd", ff, params["wo"])
+    return x + out
+
+
+def mlp_apply_raw(params: dict, h: jax.Array) -> jax.Array:
+    """SwiGLU body without norm/residual (used by MoE dense-residual path)."""
+    g = jax.nn.silu(h @ params["wg"])
+    u = h @ params["wi"]
+    return (g * u) @ params["wo"]
+
+
+# --------------------------------------------------------------------------
+# embeddings
+# --------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype):
+    return {"table": ninit(key, (vocab, d_model), d_model ** -0.5, dtype)}
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params: dict, x: jax.Array, softcap: float = 0.0) -> jax.Array:
+    logits = jnp.einsum("bsd,vd->bsv", x.astype(jnp.float32), params["table"].astype(jnp.float32))
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits

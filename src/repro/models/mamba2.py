@@ -1,0 +1,207 @@
+"""Mamba2 (SSD — state-space duality) blocks [arXiv:2405.21060].
+
+Chunked SSD for training/prefill (quadratic within chunks, linear across),
+O(1)-state recurrent step for decode. Depthwise causal conv on the (x, B, C)
+stream, gated RMSNorm output, per-head scalar A.
+
+Layout: d_inner = expand * d_model, H = d_inner // head_dim heads,
+state size N, single B/C group (G=1, broadcast over heads).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ninit, rmsnorm, split_keys
+
+
+def init_mamba2(
+    key, d_model: int, *, expand: int, head_dim: int, state: int, conv: int, dtype
+):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    d_conv_in = d_inner + 2 * state  # conv runs over [x, B, C]
+    k1, k2, k3, k4 = split_keys(key, 4)
+    return {
+        "in_proj": ninit(
+            k1, (d_model, 2 * d_inner + 2 * state + n_heads), d_model ** -0.5, dtype
+        ),
+        "conv_w": ninit(k2, (conv, d_conv_in), conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((d_conv_in,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),  # A = -exp(A_log) = -1 init
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((n_heads,), 0.01, jnp.float32))),
+        "gate_norm": jnp.zeros((d_inner,), dtype),
+        "out_proj": ninit(k3, (d_inner, d_model), d_inner ** -0.5, dtype),
+        "norm": jnp.zeros((d_model,), dtype),
+    }
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """Lower-triangular segment sums: out[..., i, j] = sum_{j<k<=i} x[..., k]."""
+    c = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((c, c), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(
+    x: jax.Array,       # (B, L, H, P)  — already dt-discretized (x * dt)
+    dA: jax.Array,      # (B, L, H)     — dt * A  (negative)
+    Bm: jax.Array,      # (B, L, H, N)
+    Cm: jax.Array,      # (B, L, H, N)
+    chunk: int,
+    initial_state=None,  # (B, H, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan. Returns (y (B,L,H,P), final_state (B,H,P,N))."""
+    b, l, h, p = x.shape
+    n = Bm.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    xr = x.reshape(b, nc, chunk, h, p).astype(jnp.float32)
+    br = Bm.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    cr = Cm.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    a = dA.reshape(b, nc, chunk, h).transpose(0, 3, 1, 2).astype(jnp.float32)  # (B,H,nc,c)
+    a_cs = jnp.cumsum(a, axis=-1)
+
+    # 1) intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(a))  # (B,H,nc,c,c)
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp", cr, br, L, xr)
+
+    # 2) chunk states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)  # (B,H,nc,c)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", br, decay_states, xr)
+
+    # 3) inter-chunk recurrence (sequential scan over chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])  # (B,H,nc)
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final, prev_states = jax.lax.scan(
+        step,
+        initial_state.astype(jnp.float32),
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # 4) inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(a_cs)  # (B,H,nc,c)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", cr, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xbc: (B, L, C); w: (K, C)."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def mamba2_forward(
+    params: dict,
+    x: jax.Array,
+    *,
+    head_dim: int,
+    state: int,
+    chunk: int,
+    norm_eps: float = 1e-5,
+    sample_mask=None,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Pre-norm Mamba2 block: x + ssd(norm(x)). x: (B, L, D)."""
+    b, l, d = x.shape
+    h_in = rmsnorm(x, params["norm"], norm_eps)
+    zxbcdt = jnp.einsum("bld,de->ble", h_in, params["in_proj"])
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"], params["conv_b"]))
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    xs = xs.reshape(b, l, n_heads, head_dim)
+    bm = jnp.broadcast_to(bm[:, :, None, :], (b, l, n_heads, state))
+    cm = jnp.broadcast_to(cm[:, :, None, :], (b, l, n_heads, state))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,L,H)
+    a = -jnp.exp(params["A_log"])  # (H,)
+    pad = (-l) % chunk
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    if use_kernel:
+        from repro.kernels.ssd_scan.ops import ssd_scan
+
+        y, _ = ssd_scan(
+            xs.astype(jnp.float32) * dt[..., None], dt * a, bm, cm, chunk=chunk
+        )
+    else:
+        y, _ = ssd_chunked(
+            xs.astype(jnp.float32) * dt[..., None], dt * a, bm, cm, chunk
+        )
+    y = y[:, :l]
+    xs = xs[:, :l]
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, l, d_inner).astype(x.dtype)
+    y = rmsnorm(y, params["gate_norm"], norm_eps) * jax.nn.silu(z)
+    return x + jnp.einsum("ble,ed->bld", y, params["out_proj"])
+
+
+# --------------------------------------------------------------------------
+# decode (recurrent) path
+# --------------------------------------------------------------------------
+
+
+def mamba2_init_cache(batch: int, params: dict, *, head_dim: int, state: int, dtype):
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    k = params["conv_w"].shape[0]
+    return {
+        "conv": jnp.zeros((batch, k - 1, d_inner + 2 * state), dtype),
+        "ssm": jnp.zeros((batch, n_heads, head_dim, state), jnp.float32),
+    }
+
+
+def mamba2_decode_step(
+    params: dict,
+    x: jax.Array,           # (B, 1, D)
+    cache: dict,
+    *,
+    head_dim: int,
+    state: int,
+    norm_eps: float = 1e-5,
+) -> tuple[jax.Array, dict]:
+    b = x.shape[0]
+    n_heads = params["A_log"].shape[0]
+    d_inner = n_heads * head_dim
+    h_in = rmsnorm(x, params["norm"], norm_eps)
+    zxbcdt = jnp.einsum("bld,de->ble", h_in, params["in_proj"])[:, 0]  # (B, E)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * state], axis=-1)
+
+    # rolling conv buffer
+    conv_in = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # (B,K,C)
+    w = params["conv_w"]  # (K, C)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_in, w) + params["conv_b"])
+    new_conv = conv_in[:, 1:]
+
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + state], axis=-1)
+    xs = xs.reshape(b, n_heads, head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a)  # (B,H)
+    bx = jnp.einsum("bhp,bn->bhpn", xs * dt[..., None], bm.astype(jnp.float32))
+    new_ssm = cache["ssm"] * da[..., None, None] + bx
+    y = jnp.einsum("bhpn,bn->bhp", new_ssm, cm.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xs
+    y = y.reshape(b, d_inner).astype(x.dtype)
+    y = rmsnorm(y, params["gate_norm"], norm_eps) * jax.nn.silu(z)
+    out = x + jnp.einsum("be,ed->bd", y, params["out_proj"])[:, None, :]
+    return out, {"conv": new_conv.astype(cache["conv"].dtype), "ssm": new_ssm}

@@ -1,0 +1,100 @@
+"""The paper's workload: a 3-layer MLP over sparse XML data.
+
+Architecture (identical to the SLIDE testbed the paper adopts): sparse input
+layer -> hidden ReLU layer -> softmax output over the (huge) label space,
+with cross-entropy loss. The input layer is a sparse-dense matmul
+(cuSPARSE SpMM in the paper; our Pallas ``spmm`` kernel on TPU — pure-jnp
+gather fallback here).
+
+Batch layout: padded COO (see data/sparse.py). The ``sample_mask`` makes the
+effective batch size adaptive while shapes stay static.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class XMLMLPConfig:
+    n_features: int
+    n_classes: int
+    hidden: int = 128
+    dtype: Any = jnp.float32
+    use_spmm_kernel: bool = False  # route input layer through Pallas spmm
+
+
+def init_params(cfg: XMLMLPConfig, rng: jax.Array) -> dict:
+    """Paper: weights ~ Normal with std scaled by layer width."""
+    k1, k2 = jax.random.split(rng)
+    w1 = jax.random.normal(k1, (cfg.n_features, cfg.hidden), cfg.dtype)
+    w1 = w1 * (1.0 / jnp.sqrt(cfg.n_features))
+    w2 = jax.random.normal(k2, (cfg.hidden, cfg.n_classes), cfg.dtype)
+    w2 = w2 * (1.0 / jnp.sqrt(cfg.hidden))
+    return {
+        "w1": w1,
+        "b1": jnp.zeros((cfg.hidden,), cfg.dtype),
+        "w2": w2,
+        "b2": jnp.zeros((cfg.n_classes,), cfg.dtype),
+    }
+
+
+def forward(cfg: XMLMLPConfig, params: dict, batch: dict) -> jax.Array:
+    """Return logits (B, n_classes)."""
+    if cfg.use_spmm_kernel:
+        from repro.kernels.spmm import ops as spmm_ops
+
+        h = spmm_ops.spmm(
+            batch["feat_idx"], batch["feat_val"], batch["feat_mask"], params["w1"]
+        )
+    else:
+        h = _sparse_input_ref(
+            batch["feat_idx"], batch["feat_val"], batch["feat_mask"], params["w1"]
+        )
+    h = jax.nn.relu(h + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def _sparse_input_ref(feat_idx, feat_val, feat_mask, w1):
+    """Gather formulation of SpMM: h[b] = sum_k val[b,k] * W1[idx[b,k]]."""
+    rows = w1[feat_idx]  # (B, nnz, H)
+    scale = (feat_val * feat_mask).astype(w1.dtype)[..., None]
+    return jnp.sum(rows * scale, axis=1)
+
+
+def loss_fn(cfg: XMLMLPConfig, params: dict, batch: dict):
+    """Masked multi-label softmax cross-entropy + top-1 accuracy.
+
+    Loss per sample = mean over its true labels of -log p(label); batch loss
+    is averaged over *valid* samples only (adaptive batch size).
+    Returns (loss, aux) with aux = dict(accuracy, n_valid).
+    """
+    logits = forward(cfg, params, batch).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    lab_logp = jnp.take_along_axis(logp, batch["label_idx"], axis=-1)
+    lmask = batch["label_mask"].astype(jnp.float32)
+    per_sample = -jnp.sum(lab_logp * lmask, axis=-1) / jnp.maximum(
+        jnp.sum(lmask, axis=-1), 1.0
+    )
+    smask = batch["sample_mask"].astype(jnp.float32)
+    n_valid = jnp.sum(smask)
+    loss = jnp.sum(per_sample * smask) / jnp.maximum(n_valid, 1.0)
+
+    pred = jnp.argmax(logits, axis=-1)
+    hit = jnp.any(
+        (batch["label_idx"] == pred[:, None]) & batch["label_mask"], axis=-1
+    ).astype(jnp.float32)
+    acc = jnp.sum(hit * smask) / jnp.maximum(n_valid, 1.0)
+    return loss, {"accuracy": acc, "n_valid": n_valid}
+
+
+def make_model(cfg: XMLMLPConfig):
+    """Bundle (init, loss) in the trainer's model protocol."""
+    return {
+        "init": lambda rng: init_params(cfg, rng),
+        "loss_fn": lambda params, batch: loss_fn(cfg, params, batch),
+        "config": cfg,
+    }

@@ -1,0 +1,116 @@
+"""SGD optimizer family used by the paper's local updates.
+
+The paper's workers run plain mini-batch SGD locally (momentum lives at the
+*global model* level inside Algorithm 2, not in the local update). We still
+provide optional local momentum and weight decay for the production LM
+configs. The API mirrors optax (init/update) but is replica-aware: the
+learning rate may be a vector of shape (R,) broadcast against leaves with a
+leading replica dimension — this is how the paper's *per-GPU learning rate*
+(linear-scaling rule, Alg. 1 lines 4/7) is expressed on an SPMD machine.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    momentum: float = 0.0
+    nesterov: bool = False
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0  # 0 = off; global-norm clip per replica
+
+
+def init_momentum(params: PyTree, cfg: SGDConfig) -> Optional[PyTree]:
+    if cfg.momentum == 0.0:
+        return None
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def _broadcast_lr(lr, leaf):
+    """lr may be scalar or (R,) matching the leaf's leading replica dim."""
+    lr = jnp.asarray(lr, jnp.float32)
+    if lr.ndim == 0:
+        return lr
+    return lr.reshape((-1,) + (1,) * (leaf.ndim - 1))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float, replica_dim: bool) -> PyTree:
+    if max_norm <= 0.0:
+        return grads
+    leaves = jax.tree_util.tree_leaves(grads)
+    if replica_dim:
+        sq = sum(
+            jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
+            for l in leaves
+        )
+        norm = jnp.sqrt(sq)  # (R,)
+        scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+        return jax.tree_util.tree_map(
+            lambda l: (l.astype(jnp.float32) * scale.reshape((-1,) + (1,) * (l.ndim - 1))).astype(l.dtype),
+            grads,
+        )
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(lambda l: (l * scale).astype(l.dtype), grads)
+
+
+def sgd_update(
+    params: PyTree,
+    grads: PyTree,
+    lr,
+    cfg: SGDConfig = SGDConfig(),
+    momentum_state: Optional[PyTree] = None,
+    update_mask=None,
+    replica_dim: bool = False,
+):
+    """One SGD step.
+
+    ``update_mask`` — optional (R,) 0/1 vector implementing the *masked
+    lockstep round*: replicas whose virtual clock has passed the mega-batch
+    horizon keep their parameters unchanged (see core/scheduler.py).
+    Returns (new_params, new_momentum_state).
+    """
+    grads = clip_by_global_norm(grads, cfg.grad_clip, replica_dim)
+
+    if cfg.weight_decay:
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g + cfg.weight_decay * p.astype(g.dtype), grads, params
+        )
+
+    new_m = None
+    if momentum_state is not None:
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: cfg.momentum * m + g.astype(m.dtype), momentum_state, grads
+        )
+        if cfg.nesterov:
+            grads = jax.tree_util.tree_map(
+                lambda g, m: g + cfg.momentum * m, grads, new_m
+            )
+        else:
+            grads = new_m
+
+    def step(p, g):
+        lr_b = _broadcast_lr(lr, p)
+        delta = lr_b * g.astype(jnp.float32)
+        if update_mask is not None:
+            delta = delta * update_mask.reshape((-1,) + (1,) * (p.ndim - 1))
+        return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(step, params, grads)
+    if new_m is not None and update_mask is not None:
+        # frozen replicas must not accumulate momentum either
+        new_m = jax.tree_util.tree_map(
+            lambda nm, om: jnp.where(
+                update_mask.reshape((-1,) + (1,) * (nm.ndim - 1)) > 0, nm, om
+            ),
+            new_m,
+            momentum_state,
+        )
+    return new_params, new_m

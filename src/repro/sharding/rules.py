@@ -1,0 +1,225 @@
+"""Partition rules: map every parameter / batch / cache leaf to a
+PartitionSpec for the production mesh.
+
+Two replica granularities (DESIGN.md §4):
+  * replica_axis='data'  (small/mid archs): the elastic-replica dim R is
+    sharded over `data`; tensor-parallel over `model`; no FSDP.
+  * replica_axis='pod'   (jamba/arctic/kimi): R is sharded over `pod`
+    (multi-pod only); within a replica params are FSDP/expert-parallel over
+    `data` + TP over `model`.
+
+Rules are *first-fit with divisibility*: each leaf has an ordered candidate
+list of specs; the first whose sharded dims divide evenly is used (e.g.
+GQA kv=8 heads cannot split over model=16 → the kv projection falls back to
+FSDP-only, exactly like Megatron replicated-KV TP groups).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+PyTree = Any
+
+
+def axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def first_fit(shape, candidates, mesh: Mesh) -> P:
+    """First candidate spec whose sharded dims are all divisible."""
+    for spec in candidates:
+        ok = True
+        for dim, ax in zip(shape, spec):
+            if ax is None:
+                continue
+            if dim % axis_size(mesh, ax) != 0:
+                ok = False
+                break
+        if ok:
+            return P(*spec)
+    return P()
+
+
+class MeshAxes:
+    """Resolved mesh-axis roles for one (cfg, mesh) pair."""
+
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.mesh = mesh
+        self.tp = "model"
+        multi_pod = "pod" in mesh.shape
+        if cfg.replica_axis == "pod":
+            self.replica = "pod" if multi_pod else None
+            self.fsdp = "data" if cfg.fsdp else None
+            self.ep = "data" if cfg.expert_parallel else None
+            self.batch = "data"
+        else:
+            # elastic replicas over data (x pod in multi-pod mode)
+            self.replica = ("pod", "data") if multi_pod else "data"
+            self.fsdp = None
+            self.ep = None
+            self.batch = None
+
+    @property
+    def n_replicas(self) -> int:
+        return axis_size(self.mesh, self.replica)
+
+    def activation_rules(self) -> dict:
+        """Logical-axis mapping consumed by sharding.annotate (training)."""
+        return {
+            "replica": self.replica,
+            "batch": self.batch,
+            "heads": self.tp,
+            "ff": self.tp,
+            "experts": self.ep if self.ep else self.tp,
+        }
+
+    def serve_rules(self) -> dict:
+        """Serving has no replica dim: batch spans (pod?, data)."""
+        multi_pod = "pod" in self.mesh.shape
+        return {
+            "replica": None,
+            "batch": ("pod", "data") if multi_pod else "data",
+            "heads": self.tp,
+            "ff": self.tp,
+            "experts": self.ep if self.ep else self.tp,
+        }
+
+
+# --------------------------------------------------------------------------
+# parameter specs
+# --------------------------------------------------------------------------
+
+
+def _leaf_spec(path: tuple, shape: tuple, ax: MeshAxes, mesh: Mesh) -> P:
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    parent = keys[-2] if len(keys) > 1 else ""
+    in_blocks = any(k.startswith("pos") for k in keys) or "layers" in keys
+    # stacked scan groups carry a leading (G,) dim
+    eff = shape[1:] if in_blocks else shape
+    tp, fsdp, ep = ax.tp, ax.fsdp, ax.ep
+    # expert-parallel and FSDP may share the same mesh axis ('data'); a
+    # single PartitionSpec cannot repeat an axis, so experts win and the
+    # expert weights' non-expert dims fall back to TP-only.
+    fsdp_e = None if (ep is not None and ep == fsdp) else fsdp
+
+    def fit(cands):
+        spec = first_fit(eff, cands, mesh)
+        return P(*((None,) + tuple(spec))) if in_blocks else spec
+
+    if name == "table" or name == "lm_head":
+        return fit([(tp, fsdp), (None, tp), (fsdp, None), ()])
+    if name == "router":
+        return fit([(fsdp, None), ()])
+    if name in ("wq", "wk", "wv") and len(eff) == 3:
+        return fit([(fsdp, tp, None), (fsdp, None, None), ()])
+    if name == "wo" and len(eff) == 3:
+        if "ffn" in keys:  # MoE expert out: (E, F, D)
+            return fit([(ep, tp, fsdp_e), (ep, tp, None), (None, tp, None), ()])
+        return fit([(tp, None, fsdp), (None, None, fsdp), ()])  # attn out
+    if name in ("wi", "wg") and len(eff) == 3:  # MoE expert in: (E, D, F)
+        return fit([(ep, fsdp_e, tp), (ep, None, tp), (None, None, tp), ()])
+    if name in ("wi", "wg") and len(eff) == 2:  # dense MLP in: (D, F)
+        return fit([(fsdp, tp), (None, tp), ()])
+    if name == "wo" and len(eff) == 2:  # dense MLP out: (F, D)
+        return fit([(tp, fsdp), (tp, None), ()])
+    if name == "in_proj":
+        return fit([(fsdp, tp), (None, tp), ()])
+    if name == "out_proj":
+        return fit([(tp, fsdp), (tp, None), ()])
+    if name == "conv_w":
+        return fit([(None, tp), ()])
+    if name == "conv_b":
+        return fit([(tp,), ()])
+    if name in ("A_log", "D", "dt_bias"):
+        return fit([(tp,), ()])
+    if name == "frontend_proj":
+        return fit([(None, tp), ()])
+    # norms, biases, everything else: replicated
+    return fit([()])
+
+
+def param_specs(cfg: ModelConfig, params: PyTree, mesh: Mesh, with_replica_dim: bool = False) -> PyTree:
+    """PartitionSpec tree for params (optionally with leading replica dim)."""
+    ax = MeshAxes(cfg, mesh)
+
+    def spec(path, leaf):
+        s = _leaf_spec(path, leaf.shape if not with_replica_dim else leaf.shape[1:], ax, mesh)
+        if with_replica_dim:
+            return P(*((ax.replica,) + tuple(s)))
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+# --------------------------------------------------------------------------
+# batch / cache specs
+# --------------------------------------------------------------------------
+
+
+def train_batch_specs(cfg: ModelConfig, batch: PyTree, mesh: Mesh) -> PyTree:
+    """Batch leaves have layout (R, B, ...)."""
+    ax = MeshAxes(cfg, mesh)
+
+    def spec(path, leaf):
+        extra = (None,) * (leaf.ndim - 2)
+        return P(ax.replica, ax.batch, *extra)
+
+    return jax.tree_util.tree_map_with_path(spec, batch)
+
+
+def serve_specs(cfg: ModelConfig, tree: PyTree, mesh: Mesh) -> PyTree:
+    """Serving has no replica dim: batch over (pod?, data), TP over model.
+
+    Cache leaves: (B, S, Hkv, hd) / (B, K, C) / (B, H, P, N) — batch-shard
+    first dim when divisible, then try TP on the head-ish dim.
+    """
+    multi_pod = "pod" in mesh.shape
+    bat = ("pod", "data") if multi_pod else "data"
+    tp = "model"
+
+    def spec(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shape = leaf.shape
+        if keys and keys[-1] == "cur_len":
+            return P()
+        # scanned block caches carry a leading (n_groups,) dim
+        grouped = any(k.startswith("pos") for k in keys)
+        eff = shape[1:] if grouped else shape
+        cands = []
+        if len(eff) == 4:  # kv cache or ssm state (B, S, Hkv, hd)/(B,H,P,N)
+            cands = [
+                (bat, None, tp, None),
+                (bat, None, None, None),
+                (None, None, tp, None),
+                (None, tp, None, None),
+            ]
+        elif len(eff) == 3:  # conv cache / frontend embeds (B, K, C)
+            cands = [(bat, None, tp), (bat, None, None), (None, None, tp)]
+        elif len(eff) == 2:  # tokens (B, S)
+            cands = [(bat, None), (None, None)]
+        elif len(eff) == 1:
+            cands = [(bat,), (None,)]
+        s = first_fit(eff, cands + [()], mesh)
+        if grouped:
+            return P(*((None,) + tuple(s)))
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, tree)
+
+
+def to_named(tree_specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

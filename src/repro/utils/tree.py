@@ -1,0 +1,103 @@
+"""Pytree utilities used across the framework.
+
+All functions are pure and jit-compatible unless noted. The elastic-averaging
+core manipulates *replicated* pytrees whose leaves carry a leading replica
+dimension ``R``; helpers here implement the per-replica reductions
+(Algorithm 2 of the paper needs per-replica L2 norms and weighted sums).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_map(fn: Callable, *trees: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(lambda x, y: x + y, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return tree_map(lambda x, y: x - y, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y, leafwise."""
+    return tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return tree_map(jnp.zeros_like, a)
+
+
+def tree_size(a: PyTree) -> int:
+    """Total number of scalar parameters in the tree (static python int)."""
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(a))
+
+
+def tree_dot(a: PyTree, b: PyTree):
+    """Sum over leaves of <a_i, b_i>."""
+    parts = jax.tree_util.tree_leaves(
+        tree_map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    )
+    return jnp.sum(jnp.stack(parts))
+
+
+def tree_l2_norm(a: PyTree):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_l2_norm_per_replica(a: PyTree):
+    """L2 norm per replica for a tree whose leaves have leading dim R.
+
+    Returns a vector of shape (R,). Used by Algorithm 2's regularization
+    check: ``||w_i||_2 / |w| < pert_thr``.
+    """
+    parts = [
+        jnp.sum(jnp.square(l.astype(jnp.float32)), axis=tuple(range(1, l.ndim)))
+        for l in jax.tree_util.tree_leaves(a)
+    ]
+    return jnp.sqrt(jnp.sum(jnp.stack(parts, axis=0), axis=0))
+
+
+def tree_weighted_sum_replicas(a: PyTree, alphas) -> PyTree:
+    """sum_i alphas[i] * a[i] over the leading replica dimension.
+
+    ``alphas`` has shape (R,). This is the merge reduction of Algorithm 2,
+    line 11 (without the momentum term).
+    """
+
+    def leaf(l):
+        al = alphas.reshape((-1,) + (1,) * (l.ndim - 1)).astype(jnp.float32)
+        return jnp.sum(al * l.astype(jnp.float32), axis=0).astype(l.dtype)
+
+    return tree_map(leaf, a)
+
+
+def tree_broadcast_replicas(a: PyTree, n: int) -> PyTree:
+    """Broadcast a tree (no replica dim) to a leading replica dim of size n."""
+    return tree_map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), a)
+
+
+def tree_replica_slice(a: PyTree, i: int) -> PyTree:
+    return tree_map(lambda l: l[i], a)
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return tree_map(lambda l: l.astype(dtype), a)
+
+
+def tree_has_nan(a: PyTree):
+    parts = [jnp.any(jnp.isnan(l)) for l in jax.tree_util.tree_leaves(a)]
+    return jnp.any(jnp.stack(parts))

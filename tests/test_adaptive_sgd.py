@@ -1,0 +1,153 @@
+"""Unit + property tests for Algorithms 1 & 2 (the paper's core math)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.configs.base import ElasticConfig
+from repro.core import adaptive_sgd as asgd
+from repro.utils import tree as tu
+
+CFG = ElasticConfig(b_min=32, b_max=256, beta=16.0, pert_thr=0.1, delta=0.1)
+
+
+# ---------------------------------------------------------------- Algorithm 1
+class TestBatchSizeScaling:
+    def test_faster_replica_gets_larger_batch(self):
+        b = np.array([128.0, 128.0])
+        lr = np.array([0.1, 0.1])
+        u = np.array([10, 6])
+        nb, nlr = asgd.batch_size_scaling(b, lr, u, CFG)
+        assert nb[0] == 128 + 16 * 2  # beta * (u0 - mean)
+        assert nb[1] == 128 - 16 * 2
+        # linear scaling rule
+        assert nlr[0] == pytest.approx(0.1 * nb[0] / 128)
+        assert nlr[1] == pytest.approx(0.1 * nb[1] / 128)
+
+    def test_equal_updates_no_change(self):
+        b = np.array([100.0, 100.0, 100.0])
+        lr = np.array([0.1, 0.1, 0.1])
+        nb, nlr = asgd.batch_size_scaling(b, lr, np.array([5, 5, 5]), CFG)
+        np.testing.assert_array_equal(nb, b)
+        np.testing.assert_array_equal(nlr, lr)
+
+    def test_bounds_respected(self):
+        # at b_max already: increase would exceed -> unchanged (line 3 guard)
+        b = np.array([256.0, 64.0])
+        lr = np.array([0.2, 0.05])
+        nb, _ = asgd.batch_size_scaling(b, lr, np.array([20, 2]), CFG)
+        assert nb[0] == 256.0
+        # decrease below b_min blocked (line 6 guard)
+        b = np.array([256.0, 33.0])
+        nb, _ = asgd.batch_size_scaling(b, lr, np.array([20, 2]), CFG)
+        assert nb[1] == 33.0
+
+    @given(
+        u=st.lists(st.integers(1, 50), min_size=2, max_size=8),
+        b0=st.integers(32, 256),
+    )
+    @settings(max_examples=50, deadline=None)
+    def test_property_bounds_and_lr_coupling(self, u, b0):
+        R = len(u)
+        b = np.full(R, float(b0))
+        lr = np.full(R, 0.1)
+        nb, nlr = asgd.batch_size_scaling(b, lr, np.array(u), CFG)
+        # batch sizes stay within [b_min, b_max] whenever they changed
+        changed = nb != b
+        assert np.all(nb[changed] >= CFG.b_min - 1e-9)
+        assert np.all(nb[changed] <= CFG.b_max + 1e-9)
+        # lr/b ratio is invariant (linear-scaling rule)
+        np.testing.assert_allclose(nlr / nb, lr / b, rtol=1e-9)
+
+    @given(u=st.lists(st.integers(1, 50), min_size=2, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_property_change_direction(self, u):
+        """Direction invariant of Algorithm 1: faster replicas (u_i > mean)
+        never shrink their batch; slower ones never grow it. (Note the
+        bound checks BLOCK out-of-range changes rather than clamping —
+        paper lines 3/6 — so magnitude is not monotone in u.)"""
+        R = len(u)
+        b = np.full(R, 128.0)
+        lr = np.full(R, 0.1)
+        uu = np.array(u, float)
+        nb, _ = asgd.batch_size_scaling(b, lr, uu, CFG)
+        mu = uu.mean()
+        assert np.all(nb[uu > mu] >= 128.0 - 1e-9)
+        assert np.all(nb[uu < mu] <= 128.0 + 1e-9)
+        assert np.all(nb[uu == mu] == 128.0)
+
+
+# ---------------------------------------------------------------- Algorithm 2
+class TestNormalizedMerging:
+    def test_weights_from_batch_when_updates_equal(self):
+        a = asgd.merge_weights(np.array([5, 5]), np.array([100.0, 300.0]))
+        np.testing.assert_allclose(a, [0.25, 0.75])
+
+    def test_weights_from_updates_when_different(self):
+        a = asgd.merge_weights(np.array([6, 2]), np.array([100.0, 300.0]))
+        np.testing.assert_allclose(a, [0.75, 0.25])
+
+    def test_weights_sum_to_one(self):
+        for u, b in [([3, 3, 3], [10, 20, 30]), ([1, 2, 3], [10, 10, 10])]:
+            a = asgd.merge_weights(np.array(u), np.array(b, float))
+            assert a.sum() == pytest.approx(1.0)
+
+    def test_perturbation_applied_when_regularized(self):
+        alphas = np.array([0.5, 0.5])
+        a, active = asgd.apply_perturbation(
+            alphas, np.array([8, 4]), np.array([0.01, 0.02]), CFG
+        )
+        assert active
+        assert a[0] == pytest.approx(0.55)  # (1+delta) * 0.5
+        assert a[1] == pytest.approx(0.45)
+
+    def test_perturbation_blocked_when_unregularized(self):
+        alphas = np.array([0.5, 0.5])
+        a, active = asgd.apply_perturbation(
+            alphas, np.array([8, 4]), np.array([0.01, 0.5]), CFG
+        )
+        assert not active
+        np.testing.assert_array_equal(a, alphas)
+
+    def test_perturbation_noop_when_updates_equal(self):
+        # argmax == argmin impossible branch: r == s when all equal
+        alphas = np.array([0.5, 0.5])
+        a, active = asgd.apply_perturbation(
+            alphas, np.array([4, 4]), np.array([0.01, 0.01]), CFG
+        )
+        assert not active
+
+    def test_merge_momentum(self):
+        replicas = {"w": jnp.stack([jnp.ones(4) * 2, jnp.ones(4) * 4])}
+        g = {"w": jnp.ones(4) * 3.0}
+        gp = {"w": jnp.ones(4) * 1.0}
+        out = asgd.normalized_merge(replicas, jnp.array([0.5, 0.5]), g, gp, 0.9)
+        # 0.5*2 + 0.5*4 + 0.9*(3-1) = 3 + 1.8
+        np.testing.assert_allclose(np.asarray(out["w"]), 4.8, rtol=1e-6)
+
+    def test_merge_memory_lean_mode(self):
+        replicas = {"w": jnp.stack([jnp.ones(4) * 2, jnp.ones(4) * 4])}
+        out = asgd.normalized_merge(replicas, jnp.array([0.25, 0.75]), None, None, 0.9)
+        np.testing.assert_allclose(np.asarray(out["w"]), 3.5, rtol=1e-6)
+
+    @given(
+        alphas=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6),
+        vals=st.lists(st.floats(-10, 10), min_size=2, max_size=6),
+    )
+    @settings(max_examples=30, deadline=None)
+    def test_property_merge_is_convex_combination(self, alphas, vals):
+        n = min(len(alphas), len(vals))
+        a = np.array(alphas[:n]); a = a / a.sum()
+        replicas = {"w": jnp.asarray(np.array(vals[:n]))[:, None] * jnp.ones((n, 3))}
+        merged = asgd.normalized_merge(replicas, jnp.asarray(a), None, None, 0.0)
+        out = np.asarray(merged["w"])
+        assert out.min() >= min(vals[:n]) - 1e-4
+        assert out.max() <= max(vals[:n]) + 1e-4
+
+    def test_replica_regularization_shape(self):
+        replicas = {"a": jnp.ones((3, 5, 5)), "b": jnp.zeros((3, 7))}
+        norms = asgd.replica_regularization(replicas)
+        assert norms.shape == (3,)
+        np.testing.assert_allclose(norms, 5.0 / 32, rtol=1e-6)  # sqrt(25)/32

@@ -1,0 +1,46 @@
+"""Checkpoint store roundtrip + trainer-state integration."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+
+
+def test_roundtrip_pytree(tmp_path):
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.bfloat16), "c": [jnp.zeros(5)]},
+    }
+    store.save(str(tmp_path / "ckpt"), tree, metadata={"step": 7})
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    restored, meta = store.load(str(tmp_path / "ckpt"), like)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+    assert restored["nested"]["b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(restored["nested"]["c"][0]), np.zeros(5)
+    )
+
+
+def test_shape_mismatch_raises(tmp_path):
+    store.save(str(tmp_path / "c"), {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError, match="shape mismatch"):
+        store.load(str(tmp_path / "c"), {"w": jnp.zeros((3, 3))})
+
+
+def test_model_params_roundtrip(tmp_path):
+    from repro.configs.archs import ARCHS
+    from repro.models import model as MDL
+
+    cfg = ARCHS["llama3.2-1b"].reduced()
+    params = MDL.init(cfg, jax.random.PRNGKey(0))
+    store.save(str(tmp_path / "m"), params, metadata={"arch": cfg.name})
+    like = jax.tree_util.tree_map(jnp.zeros_like, params)
+    restored, meta = store.load(str(tmp_path / "m"), like)
+    assert meta["arch"] == cfg.name
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    r0 = jax.tree_util.tree_leaves(restored)[0]
+    np.testing.assert_array_equal(np.asarray(l0), np.asarray(r0))

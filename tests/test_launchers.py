@@ -1,0 +1,46 @@
+"""End-to-end launcher smoke tests (CPU, reduced configs)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import serve as serve_mod
+from repro.launch import train as train_mod
+
+
+def test_train_launcher_xml():
+    state, mlog = train_mod.main([
+        "--workload", "xml", "--algorithm", "adaptive", "--replicas", "2",
+        "--megabatches", "2", "--mega-batch", "4", "--b-max", "16",
+        "--samples", "512", "--features", "256", "--classes", "64",
+        "--avg-nnz", "16", "--hidden", "32", "--lr", "1.0",
+    ])
+    assert len(mlog.records) == 2
+    assert np.isfinite(mlog.records[-1]["train_loss"])
+
+
+def test_train_launcher_lm_reduced():
+    state, mlog = train_mod.main([
+        "--workload", "lm", "--arch", "llama3.2-1b", "--reduced",
+        "--algorithm", "elastic", "--replicas", "2", "--megabatches", "1",
+        "--mega-batch", "2", "--b-max", "4", "--seq-len", "32",
+    ])
+    assert len(mlog.records) == 1
+    assert np.isfinite(mlog.records[-1]["train_loss"])
+
+
+def test_serve_launcher_reduced():
+    toks = serve_mod.main([
+        "--arch", "tinyllama-1.1b", "--reduced", "--batch", "2",
+        "--context", "4", "--gen", "3",
+    ])
+    assert toks.shape == (2, 3)
+
+
+def test_serve_launcher_sliding_window():
+    toks = serve_mod.main([
+        "--arch", "llama3.2-1b", "--reduced", "--batch", "1",
+        "--context", "6", "--gen", "2", "--window", "4",
+    ])
+    assert toks.shape == (1, 2)

@@ -1,0 +1,92 @@
+"""Optimizer: per-replica lr vectors, masked updates, clipping, schedules."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.schedules import cosine_decay, linear_scaled_lr, rescale_lr, warmup_factor
+from repro.optim.sgd import SGDConfig, clip_by_global_norm, init_momentum, sgd_update
+
+
+class TestSGD:
+    def test_basic_step(self):
+        p = {"w": jnp.ones((3,))}
+        g = {"w": jnp.ones((3,)) * 2.0}
+        new, _ = sgd_update(p, g, 0.1, SGDConfig())
+        np.testing.assert_allclose(np.asarray(new["w"]), 0.8, rtol=1e-6)
+
+    def test_per_replica_lr_vector(self):
+        p = {"w": jnp.ones((2, 3))}  # R=2
+        g = {"w": jnp.ones((2, 3))}
+        lr = jnp.asarray([0.1, 0.5])
+        new, _ = sgd_update(p, g, lr, SGDConfig(), replica_dim=True)
+        np.testing.assert_allclose(np.asarray(new["w"])[0], 0.9, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new["w"])[1], 0.5, rtol=1e-6)
+
+    def test_update_mask_freezes_replica(self):
+        p = {"w": jnp.ones((2, 3))}
+        g = {"w": jnp.ones((2, 3))}
+        mask = jnp.asarray([1.0, 0.0])
+        new, _ = sgd_update(p, g, 0.1, SGDConfig(), update_mask=mask, replica_dim=True)
+        np.testing.assert_allclose(np.asarray(new["w"])[0], 0.9, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(new["w"])[1], 1.0, rtol=1e-6)
+
+    def test_momentum_accumulates(self):
+        cfg = SGDConfig(momentum=0.9)
+        p = {"w": jnp.zeros((2,))}
+        m = init_momentum(p, cfg)
+        g = {"w": jnp.ones((2,))}
+        p1, m1 = sgd_update(p, g, 1.0, cfg, momentum_state=m)
+        p2, m2 = sgd_update(p1, g, 1.0, cfg, momentum_state=m1)
+        # v1 = 1; v2 = 0.9 + 1 = 1.9; w = -(1 + 1.9) = -2.9
+        np.testing.assert_allclose(np.asarray(p2["w"]), -2.9, rtol=1e-6)
+
+    def test_momentum_respects_mask(self):
+        cfg = SGDConfig(momentum=0.9)
+        p = {"w": jnp.zeros((2, 2))}
+        m = init_momentum(p, cfg)
+        g = {"w": jnp.ones((2, 2))}
+        mask = jnp.asarray([1.0, 0.0])
+        _, m1 = sgd_update(p, g, 1.0, cfg, momentum_state=m, update_mask=mask, replica_dim=True)
+        assert np.asarray(m1["w"])[0].sum() > 0
+        np.testing.assert_allclose(np.asarray(m1["w"])[1], 0.0)
+
+    def test_clip_global_norm(self):
+        g = {"w": jnp.ones((4,)) * 3.0}  # norm 6
+        c = clip_by_global_norm(g, 3.0, replica_dim=False)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(c["w"])), 3.0, rtol=1e-4
+        )
+
+    def test_clip_per_replica(self):
+        g = {"w": jnp.stack([jnp.ones(4) * 3.0, jnp.ones(4) * 0.1])}
+        c = clip_by_global_norm(g, 3.0, replica_dim=True)
+        arr = np.asarray(c["w"])
+        np.testing.assert_allclose(np.linalg.norm(arr[0]), 3.0, rtol=1e-4)
+        np.testing.assert_allclose(arr[1], 0.1, rtol=1e-4)  # under the cap
+
+    def test_weight_decay(self):
+        p = {"w": jnp.ones((2,))}
+        g = {"w": jnp.zeros((2,))}
+        new, _ = sgd_update(p, g, 0.1, SGDConfig(weight_decay=0.5))
+        np.testing.assert_allclose(np.asarray(new["w"]), 1 - 0.1 * 0.5, rtol=1e-6)
+
+
+class TestSchedules:
+    def test_linear_scaling(self):
+        assert linear_scaled_lr(0.1, 256, 512) == pytest.approx(0.2)
+        np.testing.assert_allclose(
+            linear_scaled_lr(0.1, 256, np.array([128, 256])), [0.05, 0.1]
+        )
+
+    def test_rescale_matches_algorithm1(self):
+        np.testing.assert_allclose(rescale_lr(0.1, 100, 150), 0.15)
+
+    def test_warmup(self):
+        assert warmup_factor(0, 10) == pytest.approx(0.1)
+        assert warmup_factor(9, 10) == 1.0
+        assert warmup_factor(100, 10) == 1.0
+        assert warmup_factor(0, 0) == 1.0
+
+    def test_cosine(self):
+        assert cosine_decay(0, 100) == pytest.approx(1.0)
+        assert cosine_decay(100, 100) == pytest.approx(0.1)

@@ -1,0 +1,113 @@
+"""Scheduler invariants: sample conservation, availability-driven dispatch,
+virtual clock semantics."""
+import hypothesis.strategies as st
+import numpy as np
+from hypothesis import given, settings
+
+from repro.configs.base import ElasticConfig
+from repro.core.heterogeneity import CostModel, SpeedModel, VirtualClock
+from repro.core.scheduler import DynamicScheduler
+
+
+def make_sched(R=4, seed=0, jitter=0.0, max_gap=0.32):
+    cfg = ElasticConfig(n_replicas=R)
+    speed = SpeedModel(R, seed=seed, jitter=jitter, max_gap=max_gap)
+    return DynamicScheduler(cfg, CostModel(speed))
+
+
+class TestDynamicScheduler:
+    def test_sample_conservation(self):
+        s = make_sched()
+        plan = s.plan_megabatch(np.array([64, 64, 64, 64]), 1000)
+        assert sum(d.n_samples for d in plan.dispatches) == 1000
+
+    def test_update_counts_match_dispatches(self):
+        s = make_sched()
+        plan = s.plan_megabatch(np.array([32, 64, 96, 128]), 2048)
+        counts = np.zeros(4, np.int64)
+        for d in plan.dispatches:
+            counts[d.replica] += 1
+        np.testing.assert_array_equal(counts, plan.u)
+
+    def test_faster_replicas_do_more_updates(self):
+        """With equal batch sizes, the fastest replica must accumulate the
+        most dispatches over a long mega-batch (paper's Fig. 4 premise)."""
+        s = make_sched(jitter=0.0)
+        plan = s.plan_megabatch(np.full(4, 64), 64 * 200)
+        speed = s.cost.speed.factors  # lower factor = faster
+        assert plan.u[np.argmin(speed)] >= plan.u[np.argmax(speed)]
+
+    def test_batch_scaling_equalizes_updates(self):
+        """Paper's steady state: batch sizes chosen so that per-batch time is
+        equal across replicas equalize update counts."""
+        s = make_sched(jitter=0.0)
+        speed = s.cost.speed.factors
+        cm = s.cost
+        # equal step time: overhead + work_cost*b_i = K / speed_i
+        K = speed.max() * (cm.overhead + cm.work_cost * 128)
+        b = np.maximum(1, np.round((K / speed - cm.overhead) / cm.work_cost)).astype(int)
+        plan = s.plan_megabatch(b, int(b.sum()) * 50)
+        assert plan.u.max() - plan.u.min() <= max(2, plan.u.max() // 20)
+
+    def test_barrier_clock(self):
+        s = make_sched()
+        plan = s.plan_megabatch(np.full(4, 64), 64 * 20)
+        # after the barrier every replica clock equals the max end time
+        assert np.all(s.clock.t == s.clock.t[0])
+        assert plan.barrier_time >= max(d.end_t for d in plan.dispatches) - 1e-12
+
+    def test_round_ordering_within_replica(self):
+        s = make_sched()
+        plan = s.plan_megabatch(np.full(4, 32), 32 * 40)
+        per_rep: dict = {}
+        for d in plan.dispatches:
+            per_rep.setdefault(d.replica, []).append(d)
+        for ds in per_rep.values():
+            rounds = [d.round for d in ds]
+            assert rounds == list(range(len(ds)))
+            starts = [d.start_t for d in ds]
+            assert starts == sorted(starts)
+
+    @given(
+        R=st.integers(2, 6),
+        mega=st.integers(100, 5000),
+        b0=st.integers(8, 128),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_property_conservation_and_rounds(self, R, mega, b0):
+        s = make_sched(R=R, jitter=0.05)
+        plan = s.plan_megabatch(np.full(R, b0), mega)
+        assert sum(d.n_samples for d in plan.dispatches) == mega
+        assert plan.n_rounds == plan.u.max()
+        sizes = plan.per_round_sizes(R)
+        assert sizes.sum() == mega
+        # each dispatch size <= its replica batch size
+        for d in plan.dispatches:
+            assert d.n_samples <= b0
+
+    def test_static_plan_equal_shares(self):
+        s = make_sched()
+        plan = s.plan_static(64, 5)
+        np.testing.assert_array_equal(plan.u, [5, 5, 5, 5])
+        assert plan.samples == 64 * 5 * 4
+
+
+class TestVirtualClock:
+    def test_earliest_and_barrier(self):
+        c = VirtualClock(3)
+        c.advance(0, 5.0)
+        c.advance(1, 1.0)
+        assert c.earliest() == 2
+        assert c.barrier() == 5.0
+        assert np.all(c.t == 5.0)
+
+
+class TestSpeedModel:
+    def test_gap_matches_paper(self):
+        sm = SpeedModel(4, max_gap=0.32, jitter=0.0, seed=1)
+        assert sm.factors.max() / sm.factors.min() <= 1.32 + 1e-9
+        assert sm.factors.max() / sm.factors.min() >= 1.31
+
+    def test_single_replica_uniform(self):
+        sm = SpeedModel(1)
+        assert sm.factors[0] == 1.0
