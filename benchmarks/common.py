@@ -68,6 +68,7 @@ def build_trainer(
     beta: float | None = None,
     b_init: int | None = None,
     het_gap: float = HET_GAP,
+    engine: str = "scan",
     seed: int = 0,
 ):
     train, test = _dataset(w)
@@ -85,6 +86,7 @@ def build_trainer(
     trainer = ElasticTrainer(
         model=model, provider=provider, cfg=cfg, base_lr=base_lr,
         speed=SpeedModel(n_rep, max_gap=het_gap, seed=seed), seed=seed,
+        engine=engine,
     )
     if b_init is not None:
         orig = trainer.init_state

@@ -1,0 +1,173 @@
+"""Mega-batch engine benchmark: legacy per-round host loop vs the
+device-resident scan-fused engine (DESIGN.md §1).
+
+Two measurements, for R in {1, 2, 4}:
+
+* **engine** — round execution isolated: one mega-batch plan is built (and
+  its batches fetched) once, then executed repeatedly. A step = one
+  lockstep round over R replicas. This is the path the engine replaces, on
+  a deliberately dispatch-bound micro workload: per-round compute is kept
+  tiny so the measurement exposes per-round dispatch + host-stack + metric
+  sync overhead — the regime the paper's accelerators live in, where a
+  round is fast and the host loop is the bottleneck.
+* **end_to_end** — full ``run_megabatch`` including scheduling and sample
+  packing (identical host work for both engines; dilutes the speedup).
+
+Warmup iterations exclude XLA compile time. Emits ``BENCH_engine.json`` at
+the repo root so future PRs have a perf trajectory.
+
+  PYTHONPATH=src python -m benchmarks.megabatch_engine
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from dataclasses import replace
+
+from .common import Workload, build_trainer
+
+REPLICA_SWEEP = (1, 2, 4)
+ENGINES = ("legacy_loop", "scan")
+
+# dispatch-bound micro workload: small enough that a round's compute is a
+# fraction of the per-round host overhead it is benchmarked against
+MICRO = Workload("engine-micro", n_features=256, n_classes=64, avg_nnz=8,
+                 avg_labels=3, n_samples=4096, hidden=16)
+B_MAX = 16
+MEGA_BATCH = 32
+
+
+def _make_trainer(engine: str, n_replicas: int):
+    trainer, _ = build_trainer(
+        MICRO,
+        algorithm="elastic",       # static plans: fixed n_rounds, no recompiles
+        n_replicas=n_replicas,
+        mega_batch=MEGA_BATCH,
+        b_max=B_MAX,
+        engine=engine,
+        seed=0,
+    )
+    return trainer
+
+
+def bench_engine_only(engine: str, n_replicas: int, repeats: int,
+                      warmup: int = 2) -> dict:
+    """Execute one pre-fetched plan repeatedly: pure round-execution rate."""
+    trainer = _make_trainer(engine, n_replicas)
+    state = trainer.init_state()
+    b_slots = trainer.cfg.b_max
+
+    def fetch(i, take):
+        payload = trainer.provider.fetch(take, b_slots)
+        return payload, trainer.provider.work_units(payload)
+
+    per_rep = max(1, round(MEGA_BATCH * B_MAX / (n_replicas * state.b[0])))
+    plan = trainer.scheduler.plan_static(int(state.b[0]), per_rep, fetch_fn=fetch)
+    run = (trainer._run_rounds_legacy if engine == "legacy_loop"
+           else trainer._run_rounds_scan)
+
+    def step(state):
+        # rebind the returned buffers: on TPU/GPU the scan engine DONATES
+        # state.replicas/momentum, so reusing the old state would pass
+        # deleted arrays on the next call
+        replicas, momentum, _, _ = run(state, plan, b_slots, False, 0.0)
+        return replace(state, replicas=replicas, momentum=momentum)
+
+    for _ in range(warmup):
+        state = step(state)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        state = step(state)
+    dt = time.perf_counter() - t0
+    rounds = plan.n_rounds * repeats
+    return {
+        "mode": "engine",
+        "engine": engine,
+        "n_replicas": n_replicas,
+        "rounds": rounds,
+        "wall_s": dt,
+        "steps_per_s": rounds / dt,
+    }
+
+
+def bench_end_to_end(engine: str, n_replicas: int, n_megabatches: int,
+                     warmup: int = 1) -> dict:
+    """Full run_megabatch incl. scheduling + sample packing (host-bound)."""
+    trainer = _make_trainer(engine, n_replicas)
+    state = trainer.init_state()
+    for _ in range(warmup):
+        state, info = trainer.run_megabatch(state)
+    rounds = 0
+    t0 = time.perf_counter()
+    for _ in range(n_megabatches):
+        state, info = trainer.run_megabatch(state)
+        rounds += info["n_rounds"]
+    dt = time.perf_counter() - t0
+    return {
+        "mode": "end_to_end",
+        "engine": engine,
+        "n_replicas": n_replicas,
+        "rounds": rounds,
+        "wall_s": dt,
+        "steps_per_s": rounds / dt,
+        "megabatches_per_s": n_megabatches / dt,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=30,
+                    help="plan executions per engine (engine-only mode)")
+    ap.add_argument("--megabatches", type=int, default=15,
+                    help="mega-batches per engine (end-to-end mode)")
+    ap.add_argument("--out", default="BENCH_engine.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    print(f"{'mode':<11} {'engine':<12} {'R':>3} {'rounds':>7} "
+          f"{'wall_s':>8} {'steps/s':>9}")
+    for R in REPLICA_SWEEP:
+        for engine in ENGINES:
+            for fn, n in (
+                (bench_engine_only, args.repeats),
+                (bench_end_to_end, args.megabatches),
+            ):
+                row = fn(engine, R, n)
+                rows.append(row)
+                print(f"{row['mode']:<11} {row['engine']:<12} {R:>3} "
+                      f"{row['rounds']:>7} {row['wall_s']:>8.3f} "
+                      f"{row['steps_per_s']:>9.1f}")
+
+    speedups = {}
+    for mode in ("engine", "end_to_end"):
+        for R in REPLICA_SWEEP:
+            by_eng = {
+                r["engine"]: r for r in rows
+                if r["n_replicas"] == R and r["mode"] == mode
+            }
+            speedups[f"{mode}_R{R}"] = (
+                by_eng["scan"]["steps_per_s"]
+                / by_eng["legacy_loop"]["steps_per_s"]
+            )
+    for k, v in speedups.items():
+        print(f"scan/legacy speedup {k}: {v:.2f}x")
+
+    out = {
+        "benchmark": "megabatch_engine",
+        "workload": MICRO.name,
+        "b_max": B_MAX,
+        "mega_batch": MEGA_BATCH,
+        "rows": rows,
+        "speedup_steps_per_s": speedups,
+    }
+    path = os.path.join(os.path.dirname(os.path.dirname(__file__)), args.out)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

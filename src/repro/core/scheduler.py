@@ -54,6 +54,21 @@ class MegaBatchPlan:
             out[d.round, d.replica] = d.n_samples
         return out
 
+    def payload_grid(self, n_replicas: int, min_rounds: int = 0) -> list[list]:
+        """Dense (n_rounds, R) grid of payloads; ``None`` = masked slot.
+
+        This is the handoff to the mega-batch engine: the sparse dispatch
+        list becomes the rectangular layout a lockstep executor consumes.
+        ``min_rounds`` pads with fully-masked rounds (no-ops under the
+        update mask) so the scan engine can bucket round counts and avoid
+        one XLA compilation per distinct ``n_rounds``.
+        """
+        n_rounds = max(self.n_rounds, min_rounds)
+        grid: list[list] = [[None] * n_replicas for _ in range(n_rounds)]
+        for d in self.dispatches:
+            grid[d.round][d.replica] = d.payload
+        return grid
+
 
 @dataclass
 class DynamicScheduler:

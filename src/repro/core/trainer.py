@@ -16,12 +16,21 @@ The trainer is model-agnostic: a *model* is ``{'init': rng->params,
 fixed-slot batches (data/providers.py). Distribution: the same jitted round
 function runs single-device (tests) or sharded — leaves carry a leading
 replica dim R which the launcher shards over the replica mesh axis.
+
+Execution engines (DESIGN.md §1):
+  * ``scan`` (default) — device-resident mega-batch engine. The whole plan
+    is pre-stacked into (n_rounds, R, ...) arrays and all rounds run inside
+    one jitted ``jax.lax.scan`` with replica/momentum buffers donated;
+    loss/accuracy/n_valid accumulate on device, so the host syncs once per
+    mega-batch instead of once per round.
+  * ``legacy_loop`` — the original per-round host loop (one jitted dispatch
+    + host stack + metric sync per round). Kept as an escape hatch and as
+    the oracle for differential testing (tests/test_megabatch_engine.py).
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -37,6 +46,15 @@ from repro.utils import tree as tu
 from repro.utils.logging import MetricsLog, log
 
 PyTree = Any
+
+ENGINES = ("scan", "legacy_loop")
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 @dataclass
@@ -60,9 +78,13 @@ class ElasticTrainer:
     speed: Optional[SpeedModel] = None
     merge_cost: float = 5e-3         # virtual seconds per merge (all-reduce)
     keep_global_copies: bool = True  # False = paper §4 memory-lean merging
+    engine: str = "scan"             # 'scan' | 'legacy_loop' (see module doc)
+    round_bucket: bool = True        # pad n_rounds to pow2: bounds recompiles
     seed: int = 0
 
     def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"engine must be one of {ENGINES}, got {self.engine!r}")
         if self.speed is None:
             self.speed = SpeedModel(self.cfg.n_replicas, seed=self.seed)
         self.cost = CostModel(self.speed)
@@ -74,9 +96,28 @@ class ElasticTrainer:
     # ------------------------------------------------------------------
     def _build_jits(self):
         loss_fn = self.model["loss_fn"]
+        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
 
-        def round_fn(replicas, momentum, batch, lr_vec, update_mask, avg_grads):
-            grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        def _crossbow_correct(replicas, c):
+            center = tu.tree_map(
+                lambda l: jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True),
+                replicas,
+            )
+            corrected = tu.tree_map(
+                lambda l, m: (
+                    l.astype(jnp.float32) - c * (l.astype(jnp.float32) - m)
+                ).astype(l.dtype),
+                replicas,
+                center,
+            )
+            return corrected, tu.tree_map(lambda m: m[0].astype(jnp.float32), center)
+
+        self._crossbow = jax.jit(_crossbow_correct, static_argnames=("c",))
+
+        def round_body(replicas, momentum, batch, lr_vec, update_mask,
+                       avg_grads, crossbow_c):
+            """One lockstep round; shared by both engines (traced inside the
+            scan for the device-resident engine, jitted alone for legacy)."""
             (loss, aux), grads = jax.vmap(grad_fn)(replicas, batch)
             if avg_grads:  # gradient aggregation: all replicas share the mean
                 grads = tu.tree_map(
@@ -94,6 +135,13 @@ class ElasticTrainer:
                 update_mask=update_mask,
                 replica_dim=True,
             )
+            if crossbow_c > 0.0:
+                corrected, _ = _crossbow_correct(new_replicas, crossbow_c)
+                # fully-masked (bucket-padding) rounds must be exact no-ops
+                live = update_mask.max() > 0
+                new_replicas = tu.tree_map(
+                    lambda c, r: jnp.where(live, c, r), corrected, new_replicas
+                )
             metrics = {
                 "loss": loss,
                 "accuracy": aux["accuracy"],
@@ -101,7 +149,62 @@ class ElasticTrainer:
             }
             return new_replicas, new_momentum, metrics
 
+        def round_fn(replicas, momentum, batch, lr_vec, update_mask, avg_grads):
+            return round_body(
+                replicas, momentum, batch, lr_vec, update_mask, avg_grads, 0.0
+            )
+
         self._round = jax.jit(round_fn, static_argnames=("avg_grads",))
+
+        def megabatch_fn(replicas, momentum, batches, lr_vec, update_mask,
+                         avg_grads, crossbow_c):
+            """Scan-fused mega-batch: all rounds in one device program.
+
+            ``batches`` leaves and ``update_mask`` carry a leading
+            (n_rounds,) scan dim. Per-round metrics reduce on device into
+            4 scalars — the only values the host ever pulls.
+            """
+
+            def body(carry, xs):
+                reps, mom = carry
+                batch, mask = xs
+                new_reps, new_mom, m = round_body(
+                    reps, mom, batch, lr_vec, mask, avg_grads, crossbow_c
+                )
+                wsum = jnp.sum(mask)
+                denom = jnp.maximum(wsum, 1.0)
+                stats = jnp.stack(
+                    [
+                        jnp.sum(m["loss"] * mask) / denom,
+                        jnp.sum(m["accuracy"] * mask) / denom,
+                        jnp.sum(m["n_valid"] * mask),
+                        (wsum > 0).astype(jnp.float32),
+                    ]
+                )
+                return (new_reps, new_mom), stats
+
+            (replicas, momentum), stats = jax.lax.scan(
+                body, (replicas, momentum), (batches, update_mask)
+            )
+            live = stats[:, 3]
+            n_live = jnp.maximum(jnp.sum(live), 1.0)
+            metrics = {
+                "loss": jnp.sum(stats[:, 0]) / n_live,
+                "accuracy": jnp.sum(stats[:, 1]) / n_live,
+                "n_valid": jnp.sum(stats[:, 2]),
+                "rounds_live": jnp.sum(live),
+            }
+            return replicas, momentum, metrics
+
+        # Donate the replica/momentum buffers: the engine updates them in
+        # place on device (no copy per mega-batch). CPU XLA cannot donate —
+        # skip there to avoid a warning per compile.
+        donate = (0, 1) if jax.default_backend() in ("tpu", "gpu") else ()
+        self._megabatch = jax.jit(
+            megabatch_fn,
+            static_argnames=("avg_grads", "crossbow_c"),
+            donate_argnums=donate,
+        )
 
         def merge_fn(replicas, alphas, global_model, prev_global, gamma):
             new_global = asgd.normalized_merge(
@@ -113,21 +216,6 @@ class ElasticTrainer:
 
         self._merge = jax.jit(merge_fn, static_argnames=("gamma",))
         self._norms = jax.jit(lambda r: tu.tree_l2_norm_per_replica(r))
-
-        def crossbow_fn(replicas, c):
-            center = tu.tree_map(
-                lambda l: jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True),
-                replicas,
-            )
-            corrected = tu.tree_map(
-                lambda l, m: (l.astype(jnp.float32) - c * (l.astype(jnp.float32) - m)).astype(l.dtype),
-                replicas,
-                center,
-            )
-            return corrected, tu.tree_map(lambda m: m[0].astype(jnp.float32), center)
-
-        self._crossbow = jax.jit(crossbow_fn, static_argnames=("c",))
-
         self._eval = jax.jit(loss_fn)
 
     # ------------------------------------------------------------------
@@ -156,45 +244,38 @@ class ElasticTrainer:
         )
 
     # ------------------------------------------------------------------
-    # one mega-batch
+    # round execution engines
     # ------------------------------------------------------------------
-    def run_megabatch(self, state: ElasticState) -> tuple[ElasticState, dict]:
-        cfg = self.cfg
-        R = cfg.n_replicas
-        algo = cfg.algorithm
-        mega_samples = cfg.mega_batch * cfg.b_max
-        b_slots = cfg.b_max
+    def _run_rounds_scan(self, state, plan, b_slots, avg_grads, crossbow_c):
+        """Device-resident engine: pre-stack the plan, scan all rounds."""
+        R = self.cfg.n_replicas
+        min_rounds = _next_pow2(plan.n_rounds) if self.round_bucket else plan.n_rounds
+        grid = plan.payload_grid(R, min_rounds=max(min_rounds, 1))
+        batches_np, mask = self.provider.stack_plan(grid, b_slots)
+        batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
+        replicas, momentum, m = self._megabatch(
+            state.replicas,
+            state.momentum,
+            batches,
+            jnp.asarray(state.lr, jnp.float32),
+            jnp.asarray(mask),
+            avg_grads=avg_grads,
+            crossbow_c=crossbow_c,
+        )
+        # single host sync per mega-batch
+        loss, acc = float(m["loss"]), float(m["accuracy"])
+        return replicas, momentum, loss, acc
 
-        def fetch(i, take):
-            payload = self.provider.fetch(take, b_slots)
-            return payload, self.provider.work_units(payload)
-
-        if algo in ("adaptive",):
-            plan = self.scheduler.plan_megabatch(
-                np.round(state.b).astype(np.int64), mega_samples, fetch_fn=fetch
-            )
-        elif algo == "single":
-            plan = self.scheduler.plan_megabatch(
-                np.round(state.b).astype(np.int64), mega_samples, fetch_fn=fetch
-            )
-        else:  # elastic / sync / crossbow: static equal partitioning
-            per_rep = max(1, int(round(mega_samples / (R * state.b[0]))))
-            plan = self.scheduler.plan_static(int(state.b[0]), per_rep, fetch_fn=fetch)
-
-        # ---- execute lockstep rounds ----
-        grid: list[list] = [[None] * R for _ in range(plan.n_rounds)]
-        for d in plan.dispatches:
-            grid[d.round][d.replica] = d.payload
+    def _run_rounds_legacy(self, state, plan, b_slots, avg_grads, crossbow_c):
+        """Original per-round host loop (escape hatch / differential oracle)."""
+        R = self.cfg.n_replicas
+        grid = plan.payload_grid(R)
         replicas, momentum = state.replicas, state.momentum
         losses, accs = [], []
-        avg_grads = algo == "sync"
-        for r in range(plan.n_rounds):
-            payloads = [
-                p if p is not None else self.provider.empty(b_slots)
-                for p in grid[r]
-            ]
+        for row in grid:
+            payloads = [p if p is not None else self.provider.empty(b_slots) for p in row]
             update_mask = jnp.asarray(
-                [1.0 if p is not None else 0.0 for p in grid[r]], jnp.float32
+                [1.0 if p is not None else 0.0 for p in row], jnp.float32
             )
             batch = {k: jnp.asarray(v) for k, v in self.provider.stack(payloads).items()}
             lr_vec = jnp.asarray(state.lr, jnp.float32)
@@ -205,8 +286,51 @@ class ElasticTrainer:
             if w.sum() > 0:
                 losses.append(float((np.asarray(m["loss"]) * w).sum() / w.sum()))
                 accs.append(float((np.asarray(m["accuracy"]) * w).sum() / w.sum()))
-            if algo == "crossbow":
-                replicas, _ = self._crossbow(replicas, cfg.crossbow_correction)
+            if crossbow_c > 0.0:
+                replicas, _ = self._crossbow(replicas, crossbow_c)
+        loss = float(np.mean(losses)) if losses else float("nan")
+        acc = float(np.mean(accs)) if accs else float("nan")
+        return replicas, momentum, loss, acc
+
+    # ------------------------------------------------------------------
+    # one mega-batch
+    # ------------------------------------------------------------------
+    def run_megabatch(self, state: ElasticState) -> tuple[ElasticState, dict]:
+        """Plan, execute, and merge one mega-batch; returns (new_state, info).
+
+        Donation contract: with the scan engine on TPU/GPU, ``state.replicas``
+        and ``state.momentum`` are DONATED to the device program — treat
+        ``state`` as consumed and continue from the returned state only.
+        (On CPU donation is disabled and old states stay readable.)
+        """
+        cfg = self.cfg
+        R = cfg.n_replicas
+        algo = cfg.algorithm
+        mega_samples = cfg.mega_batch * cfg.b_max
+        b_slots = cfg.b_max
+
+        def fetch(i, take):
+            payload = self.provider.fetch(take, b_slots)
+            return payload, self.provider.work_units(payload)
+
+        if algo in ("adaptive", "single"):
+            plan = self.scheduler.plan_megabatch(
+                np.round(state.b).astype(np.int64), mega_samples, fetch_fn=fetch
+            )
+        else:  # elastic / sync / crossbow: static equal partitioning
+            per_rep = max(1, int(round(mega_samples / (R * state.b[0]))))
+            plan = self.scheduler.plan_static(int(state.b[0]), per_rep, fetch_fn=fetch)
+
+        # ---- execute lockstep rounds ----
+        avg_grads = algo == "sync"
+        crossbow_c = cfg.crossbow_correction if algo == "crossbow" else 0.0
+        run_rounds = (
+            self._run_rounds_legacy if self.engine == "legacy_loop"
+            else self._run_rounds_scan
+        )
+        replicas, momentum, train_loss, train_acc = run_rounds(
+            state, plan, b_slots, avg_grads, crossbow_c
+        )
 
         # ---- merge ----
         pert_active = False
@@ -253,7 +377,7 @@ class ElasticTrainer:
 
         new_state = ElasticState(
             replicas=replicas,
-            global_model=new_global if state.global_model is not None or algo in ("crossbow", "sync", "single") else new_global,
+            global_model=new_global,
             prev_global=prev_global,
             momentum=momentum,
             b=np.asarray(new_b, np.float64),
@@ -266,8 +390,8 @@ class ElasticTrainer:
             "lr": np.round(np.asarray(new_lr), 6).tolist(),
             "alphas": np.round(alphas, 4).tolist(),
             "pert_active": bool(pert_active),
-            "train_loss": float(np.mean(losses)) if losses else float("nan"),
-            "train_accuracy": float(np.mean(accs)) if accs else float("nan"),
+            "train_loss": train_loss,
+            "train_accuracy": train_acc,
             "virtual_time": virtual_time,
             "n_rounds": plan.n_rounds,
         }

@@ -76,3 +76,39 @@ def stack_replica_batches(batches: list[SparseBatch]) -> dict:
         "label_mask": np.stack([b.label_mask for b in batches]),
         "sample_mask": np.stack([b.sample_mask for b in batches]),
     }
+
+
+_SPARSE_FIELDS = (
+    "feat_idx", "feat_val", "feat_mask", "label_idx", "label_mask", "sample_mask",
+)
+
+
+def stack_plan_grid(grid: list[list], template: dict) -> dict:
+    """Stack a whole mega-batch plan of dict payloads into (n_rounds, R, ...)
+    arrays.
+
+    ``grid`` is the scheduler's dense payload grid (None = masked slot);
+    ``template`` fixes the per-slot shapes/dtypes. Masked slots stay
+    all-zero, which is exactly an empty payload (every mask False), so the
+    engine's update mask is the only thing that distinguishes them.
+    """
+    n_rounds, n_replicas = len(grid), len(grid[0])
+    out = {
+        k: np.zeros((n_rounds, n_replicas) + v.shape, v.dtype)
+        for k, v in template.items()
+    }
+    for r, row in enumerate(grid):
+        for i, p in enumerate(row):
+            if p is not None:
+                for k in out:
+                    out[k][r, i] = p[k]
+    return out
+
+
+def stack_plan_batches(grid: list[list], template: SparseBatch) -> dict:
+    """SparseBatch view of :func:`stack_plan_grid`."""
+    as_dict = lambda p: {f: getattr(p, f) for f in _SPARSE_FIELDS}
+    return stack_plan_grid(
+        [[None if p is None else as_dict(p) for p in row] for row in grid],
+        as_dict(template),
+    )

@@ -10,9 +10,16 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from .batcher import SparseBatcher, stack_replica_batches
+from .batcher import SparseBatcher, stack_plan_batches, stack_replica_batches
 from .sparse import SparseBatch, SparseDataset, pack_batch
-from .tokens import TokenStream, stack_token_batches
+from .tokens import TokenStream, stack_plan_token_batches, stack_token_batches
+
+
+def plan_update_mask(grid: list[list]) -> np.ndarray:
+    """(n_rounds, R) float32 mask: 1 where a payload was dispatched."""
+    return np.asarray(
+        [[0.0 if p is None else 1.0 for p in row] for row in grid], np.float32
+    )
 
 
 @dataclass
@@ -34,6 +41,10 @@ class SparseProvider:
 
     def stack(self, payloads: list[SparseBatch]) -> dict:
         return stack_replica_batches(payloads)
+
+    def stack_plan(self, grid: list[list], b_slots: int) -> tuple[dict, np.ndarray]:
+        """Whole-plan stack: (n_rounds, R, ...) arrays + (n_rounds, R) mask."""
+        return stack_plan_batches(grid, self.empty(b_slots)), plan_update_mask(grid)
 
     def test_batches(self, ds: SparseDataset, b_slots: int, max_samples: int = 0):
         """Pack a test dataset into full-size batches for evaluation."""
@@ -67,6 +78,13 @@ class TokenProvider:
 
     def stack(self, payloads: list[dict]) -> dict:
         return stack_token_batches(payloads)
+
+    def stack_plan(self, grid: list[list], b_slots: int) -> tuple[dict, np.ndarray]:
+        """Whole-plan stack: (n_rounds, R, ...) arrays + (n_rounds, R) mask."""
+        return (
+            stack_plan_token_batches(grid, self.empty(b_slots)),
+            plan_update_mask(grid),
+        )
 
     def test_batches(self, n_batches: int, b_slots: int):
         return [self.fetch(b_slots, b_slots) for _ in range(n_batches)]

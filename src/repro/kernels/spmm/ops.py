@@ -10,9 +10,12 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def spmm(feat_idx, feat_val, feat_mask, w, block_h: int = 512):
-    """Padded-COO batch x dense W. Returns (B, H) in W's dtype."""
+def spmm(feat_idx, feat_val, feat_mask, w, block_h: int = 512, block_k: int = 8):
+    """Padded-COO batch x dense W. Returns (B, H) in W's dtype.
+
+    ``block_k`` = embedding rows gathered per grid step (DESIGN.md §2:
+    K-blocked gather; 1 recovers the one-row-per-step formulation)."""
     return _spmm_kernel(
         feat_idx, feat_val, feat_mask, w,
-        block_h=block_h, interpret=not _on_tpu(),
+        block_h=block_h, block_k=block_k, interpret=not _on_tpu(),
     )

@@ -3,20 +3,27 @@
 GPU algorithm (cuSPARSE CSR SpMM) does not transfer to TPU: there is no
 sparse unit, and warp-level row decomposition has no analogue. The
 TPU-native formulation (DESIGN.md §2) is **scalar-prefetch driven row
-gather + dense accumulate**:
+gather + dense accumulate**, K-blocked:
 
   * ``feat_idx`` is a *scalar-prefetch* operand (SMEM): the BlockSpec
-    index_map of W reads it to drive the HBM->VMEM DMA of exactly the one
-    embedding row each grid step needs — the TPU analogue of cuSPARSE's
-    indexed loads, with the DMA pipelined by the Pallas grid.
-  * grid = (B, K, H_blocks): for sample b and nnz slot k, fetch row
-    W[idx[b,k]] one (1, block_h) tile at a time and accumulate
-    ``val * mask * row`` into out[b] in VMEM (f32). The accumulator tile is
-    revisited across the K dimension (out index_map ignores k), so it stays
-    resident in VMEM for the whole inner loop — only the W row moves.
+    index_maps of the W operands read it to drive the HBM->VMEM DMA of
+    exactly the embedding rows each grid step needs — the TPU analogue of
+    cuSPARSE's indexed loads, with the DMA pipelined by the Pallas grid.
+  * grid = (B, K/block_k, H_blocks): for sample b and nnz slots
+    [kb*block_k, (kb+1)*block_k), gather ``block_k`` rows of W — the same
+    array is passed ``block_k`` times, operand j's index_map selecting row
+    ``idx[b, kb*block_k + j]`` — and accumulate ``sum_j val_j*mask_j*row_j``
+    into out[b] in VMEM (f32). Blocking the K dimension cuts grid steps
+    (and per-step DMA setup / grid bookkeeping) by ``block_k``x versus the
+    one-row-per-step formulation; the ``block_k`` row DMAs of one step are
+    issued together and overlap.
+  * The accumulator tile is revisited across the K dimension (out index_map
+    ignores kb), so it stays resident in VMEM for the whole inner loop —
+    only the W rows move.
 
 Zero-padding slots contribute 0 via the mask; idx of padded slots may be
-anything in range (the gathered row is multiplied by 0).
+anything in range (the gathered row is multiplied by 0). K is padded up to
+a multiple of ``block_k`` with zero-scale slots.
 """
 from __future__ import annotations
 
@@ -28,24 +35,31 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_H = 512
+DEFAULT_BLOCK_K = 8
 
 
-def _spmm_kernel(idx_ref, scale_ref, w_ref, out_ref):
-    """Grid (B, K, nH). idx_ref is scalar-prefetched (SMEM, (B, K))."""
-    k = pl.program_id(1)
+def _make_kblocked_kernel(block_k: int):
+    def kernel(idx_ref, scale_ref, *refs):
+        """Grid (B, K/block_k, nH). idx_ref is scalar-prefetched (SMEM, (B, K));
+        refs = block_k gathered W rows (each (1, BH)) + the out tile."""
+        w_refs, out_ref = refs[:-1], refs[-1]
+        kb = pl.program_id(1)
 
-    @pl.when(k == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        @pl.when(kb == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
 
-    b = pl.program_id(0)
-    s = scale_ref[0, 0]                     # val*mask for (b, k), f32
-    row = w_ref[...].astype(jnp.float32)    # (1, BH) — row idx[b,k]
-    out_ref[...] += (s * row).astype(out_ref.dtype)
+        acc = jnp.zeros(out_ref.shape, jnp.float32)
+        for j in range(block_k):                      # unrolled VMEM accumulate
+            s = scale_ref[0, j, 0]                    # val*mask for (b, kb*bk+j)
+            acc += s * w_refs[j][...].astype(jnp.float32)
+        out_ref[...] += acc.astype(out_ref.dtype)
+
+    return kernel
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_h", "interpret")
+    jax.jit, static_argnames=("block_h", "block_k", "interpret")
 )
 def spmm(
     feat_idx: jax.Array,    # (B, K) int32
@@ -54,6 +68,7 @@ def spmm(
     w: jax.Array,           # (NF, H)
     *,
     block_h: int = DEFAULT_BLOCK_H,
+    block_k: int = DEFAULT_BLOCK_K,
     interpret: bool = False,
 ) -> jax.Array:
     b, k = feat_idx.shape
@@ -63,25 +78,34 @@ def spmm(
     if pad_h:
         w = jnp.pad(w, ((0, 0), (0, pad_h)))
     hp = h + pad_h
+    block_k = max(1, min(block_k, k))
+    pad_k = (-k) % block_k
     scale = (feat_val * feat_mask).astype(jnp.float32)[..., None]  # (B, K, 1)
+    if pad_k:  # zero-scale slots: gathered row 0 is multiplied by 0
+        feat_idx = jnp.pad(feat_idx, ((0, 0), (0, pad_k)))
+        scale = jnp.pad(scale, ((0, 0), (0, pad_k), (0, 0)))
+    kp = k + pad_k
 
-    grid = (b, k, hp // block_h)
+    grid = (b, kp // block_k, hp // block_h)
+
+    def w_spec(j):
+        return pl.BlockSpec(
+            (1, block_h), lambda bi, ki, hi, idx, j=j: (idx[bi, ki * block_k + j], hi)
+        )
 
     out = pl.pallas_call(
-        _spmm_kernel,
+        _make_kblocked_kernel(block_k),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
             in_specs=[
-                pl.BlockSpec((1, 1, 1), lambda bi, ki, hi, idx: (bi, ki, 0)),
-                # W row selected by the prefetched index — this is the gather
-                pl.BlockSpec(
-                    (1, block_h), lambda bi, ki, hi, idx: (idx[bi, ki], hi)
-                ),
+                pl.BlockSpec((1, block_k, 1), lambda bi, ki, hi, idx: (bi, ki, 0)),
+                # W rows selected by the prefetched indices — this is the gather
+                *[w_spec(j) for j in range(block_k)],
             ],
             out_specs=pl.BlockSpec((1, block_h), lambda bi, ki, hi, idx: (bi, hi)),
         ),
         out_shape=jax.ShapeDtypeStruct((b, hp), jnp.float32),
         interpret=interpret,
-    )(feat_idx.astype(jnp.int32), scale, w)
+    )(feat_idx.astype(jnp.int32), scale, *([w] * block_k))
     return out[:, :h].astype(w.dtype)

@@ -63,7 +63,6 @@ def _split_instr(line: str):
 _CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
 _COND = re.compile(r"condition=%?([\w.\-]+)")
 _BODY = re.compile(r"body=%?([\w.\-]+)")
-_OPERANDS = re.compile(r"\(([^)]*)\)")
 
 
 def shape_numel_bytes(type_str: str) -> tuple[int, int]:
@@ -117,12 +116,13 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
 def _dot_flops(comp: Computation, name: str, tstr: str, rest: str) -> float:
     """FLOPs of a dot: 2 * numel(result) * contracted_dim_size."""
     out_numel, _ = shape_numel_bytes(tstr)
-    # operand names
-    ops = _OPERANDS.search(rest.split(" dot(")[-1] if " dot(" in rest else rest)
+    # lhs operand: printed either as `dot(%name, ...)` (older jaxlib) or as
+    # `dot(TYPE %name, ...)` with an inline type — prefer the inline type,
+    # fall back to the shape table.
     lhs_shape = None
-    m = re.search(r"dot\(\s*%?([\w.\-]+)", rest)
+    m = re.search(r"dot\(\s*(?:(\w+\[[\d,]*\]\S*)\s+)?%?([\w.\-]+)", rest)
     if m:
-        lhs_shape = comp.shapes.get(m.group(1))
+        lhs_shape = m.group(1) or comp.shapes.get(m.group(2))
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
     k = 1
     if lhs_shape and mc and mc.group(1):

@@ -26,7 +26,7 @@ import numpy as np
 from repro.configs.archs import ARCHS
 from repro.configs.base import ElasticConfig
 from repro.core.heterogeneity import SpeedModel
-from repro.core.trainer import ElasticTrainer
+from repro.core.trainer import ENGINES, ElasticTrainer
 from repro.data.providers import SparseProvider, TokenProvider
 from repro.data.xml_synth import make_xml_dataset
 from repro.data.sparse import train_test_split
@@ -72,6 +72,9 @@ def main(argv=None):
                     help="reduced config (CPU smoke)")
     ap.add_argument("--algorithm", default="adaptive",
                     choices=["adaptive", "elastic", "sync", "crossbow", "single"])
+    ap.add_argument("--engine", default="scan", choices=list(ENGINES),
+                    help="mega-batch executor: device-resident scan (default)"
+                         " or the per-round host loop")
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--megabatches", type=int, default=10)
     ap.add_argument("--mega-batch", type=int, default=20,
@@ -106,6 +109,7 @@ def main(argv=None):
     trainer = ElasticTrainer(
         model=model, provider=provider, cfg=ecfg,
         sgd=SGDConfig(), base_lr=args.lr, speed=speed, seed=args.seed,
+        engine=args.engine,
     )
     state, mlog = trainer.run(
         args.megabatches, test_batches=test_batches, verbose=True

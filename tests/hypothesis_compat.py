@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+The container image does not always ship ``hypothesis`` (it is a dev extra,
+see requirements-dev.txt). Importing through this module keeps the example-
+based tests in a file collectable and green while marking every ``@given``
+test as skipped when hypothesis is missing.
+
+Usage (replaces the direct hypothesis imports):
+
+    from hypothesis_compat import HAS_HYPOTHESIS, given, settings, st
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:  # hypothesis not installed: stub + skip
+    HAS_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Stands in for ``hypothesis.strategies``: every strategy factory
+        returns a placeholder (the test is skipped before it is called)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        return lambda fn: pytest.mark.skip(
+            reason="hypothesis not installed (pip install -r requirements-dev.txt)"
+        )(fn)
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -1,10 +1,9 @@
 """Unit + property tests for Algorithms 1 & 2 (the paper's core math)."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import ElasticConfig
 from repro.core import adaptive_sgd as asgd

@@ -2,10 +2,9 @@
 invariants (hypothesis where useful)."""
 import os
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.data.batcher import SampleStream, SparseBatcher
 from repro.data.libsvm import read_libsvm, write_libsvm

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypothesis_compat import given, settings, st
 
 from repro.kernels.flash_attention.ops import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -98,12 +98,13 @@ def test_weighted_merge_property_convex(r, n, seed):
     "b,k,nf,h", [(4, 16, 512, 128), (8, 7, 300, 512), (2, 33, 1024, 200)]
 )
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_spmm_sweep(b, k, nf, h, dtype):
+@pytest.mark.parametrize("block_k", [1, 8])
+def test_spmm_sweep(b, k, nf, h, dtype, block_k):
     fi = jnp.asarray(RNG.integers(0, nf, (b, k)), jnp.int32)
     fv = jnp.asarray(RNG.normal(size=(b, k)), jnp.float32)
     fm = jnp.asarray(RNG.random((b, k)) > 0.3)
     w = jnp.asarray(RNG.normal(size=(nf, h)), dtype)
-    got = spmm(fi, fv, fm, w)
+    got = spmm(fi, fv, fm, w, block_k=block_k)
     want = spmm_ref(fi, fv, fm, w)
     np.testing.assert_allclose(_f32(got), _f32(want), **_tol(dtype))
 

@@ -1,0 +1,183 @@
+"""Differential tests: the scan-fused device-resident mega-batch engine must
+be numerically equivalent to the legacy per-round host loop (DESIGN.md §1) —
+same per-mega-batch losses, same merged parameters — for every algorithm.
+
+Also covers the engine plumbing: the scheduler's plan -> dense grid handoff
+and the providers' whole-plan stacking.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ElasticConfig
+from repro.core.heterogeneity import CostModel, SpeedModel
+from repro.core.scheduler import DynamicScheduler
+from repro.core.trainer import ElasticTrainer, _next_pow2
+from repro.data.providers import SparseProvider, TokenProvider
+from repro.data.sparse import train_test_split
+from repro.data.xml_synth import make_xml_dataset
+from repro.models.xml_mlp import XMLMLPConfig, make_model
+from repro.optim.sgd import SGDConfig
+
+ALGOS = ["adaptive", "elastic", "sync", "crossbow", "single"]
+
+
+@pytest.fixture(scope="module")
+def xml_data():
+    full = make_xml_dataset(
+        n_samples=1536, n_features=512, n_classes=64, avg_nnz=24, seed=0
+    )
+    return train_test_split(full, 0.15)
+
+
+@pytest.fixture(scope="module")
+def model():
+    return make_model(XMLMLPConfig(n_features=512, n_classes=64, hidden=48))
+
+
+def _run(engine, algo, xml_data, model, n_mega=3, momentum=0.0, seed=3):
+    ds, _ = xml_data
+    R = 1 if algo == "single" else 4
+    prov = SparseProvider.make(ds, seed=seed)
+    cfg = ElasticConfig.from_bmax(32, algorithm=algo, n_replicas=R, mega_batch=6)
+    tr = ElasticTrainer(
+        model, prov, cfg, base_lr=0.5, seed=seed, engine=engine,
+        sgd=SGDConfig(momentum=momentum),
+    )
+    state = tr.init_state()
+    infos = []
+    for _ in range(n_mega):
+        state, info = tr.run_megabatch(state)
+        infos.append(info)
+    return state, infos
+
+
+def _assert_tree_close(a, b, **tol):
+    for la, lb in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **tol)
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_scan_matches_legacy(algo, xml_data, model):
+    """Same losses, same merged params, same replicas after N mega-batches."""
+    st_l, inf_l = _run("legacy_loop", algo, xml_data, model)
+    st_s, inf_s = _run("scan", algo, xml_data, model)
+    np.testing.assert_allclose(
+        [i["train_loss"] for i in inf_l],
+        [i["train_loss"] for i in inf_s],
+        rtol=2e-4, atol=1e-5,
+    )
+    np.testing.assert_allclose(
+        [i["train_accuracy"] for i in inf_l],
+        [i["train_accuracy"] for i in inf_s],
+        rtol=2e-4, atol=1e-4,
+    )
+    assert [i["u"] for i in inf_l] == [i["u"] for i in inf_s]
+    _assert_tree_close(st_l.replicas, st_s.replicas, rtol=1e-4, atol=1e-5)
+    _assert_tree_close(st_l.global_model, st_s.global_model, rtol=1e-4, atol=1e-5)
+
+
+def test_scan_matches_legacy_with_momentum(xml_data, model):
+    """Momentum state threads through the scan carry identically."""
+    st_l, inf_l = _run("legacy_loop", "adaptive", xml_data, model, momentum=0.9)
+    st_s, inf_s = _run("scan", "adaptive", xml_data, model, momentum=0.9)
+    np.testing.assert_allclose(
+        [i["train_loss"] for i in inf_l],
+        [i["train_loss"] for i in inf_s],
+        rtol=2e-4, atol=1e-5,
+    )
+    _assert_tree_close(st_l.momentum, st_s.momentum, rtol=1e-4, atol=1e-5)
+    _assert_tree_close(st_l.replicas, st_s.replicas, rtol=1e-4, atol=1e-5)
+
+
+def test_round_bucketing_is_noop(xml_data, model):
+    """Pow2 round padding (masked no-op rounds) must not change results."""
+    ds, _ = xml_data
+    prov = SparseProvider.make(ds, seed=5)
+    cfg = ElasticConfig.from_bmax(32, algorithm="adaptive", n_replicas=4, mega_batch=5)
+    outs = {}
+    for bucket in (False, True):
+        prov = SparseProvider.make(ds, seed=5)
+        tr = ElasticTrainer(
+            make_model(XMLMLPConfig(n_features=512, n_classes=64, hidden=48)),
+            prov, cfg, base_lr=0.5, seed=5, engine="scan",
+        )
+        tr.round_bucket = bucket
+        state = tr.init_state()
+        state, info = tr.run_megabatch(state)
+        outs[bucket] = (state, info)
+    np.testing.assert_allclose(
+        outs[False][1]["train_loss"], outs[True][1]["train_loss"],
+        rtol=1e-5, atol=1e-6,
+    )
+    _assert_tree_close(
+        outs[False][0].replicas, outs[True][0].replicas, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_next_pow2():
+    assert [_next_pow2(n) for n in (0, 1, 2, 3, 7, 8, 9)] == [1, 1, 2, 4, 8, 8, 16]
+
+
+def test_payload_grid_handoff():
+    """plan.payload_grid is dense, complete, and pads with masked rounds."""
+    cfg = ElasticConfig(n_replicas=3, b_max=16, b_min=2)
+    sched = DynamicScheduler(cfg, CostModel(SpeedModel(3, seed=1)))
+    plan = sched.plan_megabatch(
+        np.array([4, 4, 4]), 40, fetch_fn=lambda i, take: (("payload", i, take), take)
+    )
+    grid = plan.payload_grid(3)
+    assert len(grid) == plan.n_rounds
+    n_dispatched = sum(p is not None for row in grid for p in row)
+    assert n_dispatched == len(plan.dispatches)
+    padded = plan.payload_grid(3, min_rounds=plan.n_rounds + 3)
+    assert len(padded) == plan.n_rounds + 3
+    assert all(p is None for row in padded[plan.n_rounds:] for p in row)
+
+
+def test_stack_plan_sparse(xml_data):
+    """stack_plan == per-round stack of (payload or empty), for every round."""
+    ds, _ = xml_data
+    prov = SparseProvider.make(ds, seed=7)
+    b_slots = 16
+    grid = [
+        [prov.fetch(8, b_slots), None, prov.fetch(16, b_slots)],
+        [None, prov.fetch(3, b_slots), None],
+    ]
+    stacked, mask = prov.stack_plan(grid, b_slots)
+    np.testing.assert_array_equal(mask, [[1, 0, 1], [0, 1, 0]])
+    for r, row in enumerate(grid):
+        per_round = prov.stack([p if p is not None else prov.empty(b_slots) for p in row])
+        for k, v in per_round.items():
+            np.testing.assert_array_equal(stacked[k][r], v)
+
+
+def test_stack_plan_tokens():
+    prov = TokenProvider.make(vocab_size=64, seq_len=12, seed=0)
+    b_slots = 8
+    grid = [[prov.fetch(8, b_slots), None], [None, prov.fetch(4, b_slots)]]
+    stacked, mask = prov.stack_plan(grid, b_slots)
+    np.testing.assert_array_equal(mask, [[1, 0], [0, 1]])
+    assert stacked["tokens"].shape == (2, 2, b_slots, 12)
+    for r, row in enumerate(grid):
+        per_round = prov.stack([p if p is not None else prov.empty(b_slots) for p in row])
+        for k, v in per_round.items():
+            np.testing.assert_array_equal(stacked[k][r], v)
+
+
+def test_token_provider_scan_engine():
+    """The scan engine runs the LM workload end-to-end (token provider)."""
+    from repro.configs.base import ModelConfig
+    from repro.models import model as MDL
+
+    cfg = ModelConfig(
+        name="tiny-test", arch_type="dense", n_layers=1, d_model=32,
+        n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+    )
+    model = MDL.make_model(cfg)
+    prov = TokenProvider.make(cfg.vocab_size, 16, seed=0)
+    ecfg = ElasticConfig.from_bmax(8, algorithm="adaptive", n_replicas=2, mega_batch=3)
+    tr = ElasticTrainer(model, prov, ecfg, base_lr=0.1, seed=0, engine="scan")
+    state = tr.init_state()
+    state, info = tr.run_megabatch(state)
+    assert np.isfinite(info["train_loss"])

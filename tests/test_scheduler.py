@@ -1,8 +1,7 @@
 """Scheduler invariants: sample conservation, availability-driven dispatch,
 virtual clock semantics."""
-import hypothesis.strategies as st
 import numpy as np
-from hypothesis import given, settings
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import ElasticConfig
 from repro.core.heterogeneity import CostModel, SpeedModel, VirtualClock
