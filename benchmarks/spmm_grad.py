@@ -1,0 +1,225 @@
+"""Sparse-gradient path benchmark: dense autodiff vs the row-sparse path
+(DESIGN.md §3), swept over the feature-space size NF.
+
+Three measurements per (path, NF):
+
+* **fwd_bwd** — one gradient computation (value_and_grad of the dense loss
+  vs ``loss_and_sparse_grad``). The dense backward materializes the (NF, H)
+  d``w1``; the sparse one stops at O(B*K*H) values.
+* **fwd_bwd_update** — gradient + ``sgd_update``: the dense update rewrites
+  all NF*H parameters, the sparse one scatters ~B*K rows. This is the
+  per-round hot path the paper's per-update cost argument is about.
+* **end_to_end** — full ``run_megabatch`` on the scan engine (R=4,
+  adaptive) with the trainer's ``sparse_grads`` flag on/off.
+
+Both paths use the jnp input layer off-TPU (interpret-mode Pallas would
+benchmark the interpreter, not the math); on TPU the same flags route
+through the Pallas kernels. Emits ``BENCH_spmm_grad.json`` at the repo root.
+
+  PYTHONPATH=src python -m benchmarks.spmm_grad
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ElasticConfig
+from repro.core.trainer import ElasticTrainer
+from repro.data.providers import SparseProvider
+from repro.data.sparse import SparseDataset
+from repro.models.xml_mlp import (
+    XMLMLPConfig, init_params, loss_and_sparse_grad, loss_fn,
+)
+from repro.optim.sgd import SGDConfig, sgd_update
+
+NF_SWEEP = (10_000, 50_000, 100_000, 200_000)
+B, K, HIDDEN, N_CLASSES, N_LABELS = 64, 64, 64, 512, 4
+E2E_NF = (10_000, 100_000)
+
+
+def _synth_batch(nf: int, rng: np.random.Generator) -> dict:
+    """Uniform synthetic padded-COO batch (stats don't matter for perf)."""
+    return {
+        "feat_idx": jnp.asarray(rng.integers(0, nf, (B, K)), jnp.int32),
+        "feat_val": jnp.asarray(rng.gamma(2.0, 0.5, (B, K)), jnp.float32),
+        "feat_mask": jnp.asarray(rng.random((B, K)) > 0.1),
+        "label_idx": jnp.asarray(
+            rng.integers(0, N_CLASSES, (B, N_LABELS)), jnp.int32
+        ),
+        "label_mask": jnp.asarray(rng.random((B, N_LABELS)) > 0.3),
+        "sample_mask": jnp.ones((B,), bool),
+    }
+
+
+def _synth_dataset(nf: int, n_samples: int, rng: np.random.Generator) -> SparseDataset:
+    """Uniform-index dataset, cheap to build at NF >= 100k (xml_synth's
+    Zipf sampling is O(NF) per draw — too slow for a perf fixture)."""
+    nnz = np.clip(rng.lognormal(np.log(K // 2), 0.4, n_samples), 4, K).astype(np.int64)
+    indptr = np.concatenate([[0], np.cumsum(nnz)])
+    n_lab = np.maximum(1, rng.poisson(N_LABELS, n_samples)).astype(np.int64)
+    label_ptr = np.concatenate([[0], np.cumsum(n_lab)])
+    return SparseDataset(
+        n_features=nf,
+        n_classes=N_CLASSES,
+        indptr=indptr,
+        indices=rng.integers(0, nf, indptr[-1]).astype(np.int32),
+        values=rng.gamma(2.0, 0.5, indptr[-1]).astype(np.float32),
+        label_ptr=label_ptr,
+        labels=rng.integers(0, N_CLASSES, label_ptr[-1]).astype(np.int32),
+    )
+
+
+def _time(fn, repeats: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return time.perf_counter() - t0
+
+
+ROUNDS = 8  # rounds scanned inside one jit, like the mega-batch engine
+
+
+def bench_step(nf: int, repeats: int) -> list[dict]:
+    """Per-round cost of grad (+ update), measured the way the scan engine
+    runs it: ROUNDS rounds inside one ``jax.lax.scan`` so the parameter
+    buffer is updated in place (an isolated jit call would have to
+    copy-on-write the whole (NF, H) buffer for the scatter and hide the
+    sparse win behind memcpy)."""
+    cfg = XMLMLPConfig(n_features=nf, n_classes=N_CLASSES, hidden=HIDDEN)
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _synth_batch(nf, rng)
+    sgd = SGDConfig()
+
+    dense_grad = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, batch), has_aux=True
+    )
+    sparse_grad = lambda p: loss_and_sparse_grad(cfg, p, batch)
+
+    def scanned(grad_fn, with_update):
+        def body(p, _):
+            (loss, _), g = grad_fn(p)
+            if with_update:
+                p, _ = sgd_update(p, g, 0.1, sgd)
+                return p, loss
+            # fwd+bwd only: keep grads live via a cheap reduction
+            return p, loss + sum(
+                jnp.sum(l.astype(jnp.float32))
+                for l in jax.tree_util.tree_leaves(g)
+            )
+
+        @jax.jit
+        def run(p):
+            return jax.lax.scan(body, p, None, length=ROUNDS)
+
+        return run
+
+    rows = []
+    for mode, with_update in (("fwd_bwd", False), ("fwd_bwd_update", True)):
+        for path, grad_fn in (("dense", dense_grad), ("sparse", sparse_grad)):
+            run = scanned(grad_fn, with_update)
+            fn = lambda: jax.block_until_ready(run(params))
+            dt = _time(fn, repeats)
+            steps = repeats * ROUNDS
+            rows.append({
+                "mode": mode, "path": path, "nf": nf, "steps": steps,
+                "wall_s": dt, "steps_per_s": steps / dt,
+            })
+    return rows
+
+
+def bench_end_to_end(nf: int, n_megabatches: int) -> list[dict]:
+    rows = []
+    for sparse in (False, True):
+        ds = _synth_dataset(nf, 4096, np.random.default_rng(1))
+        prov = SparseProvider.make(ds, seed=0)
+        cfg = ElasticConfig.from_bmax(
+            B, algorithm="adaptive", n_replicas=4, mega_batch=8
+        )
+        tr = ElasticTrainer(
+            _make_model_dict(nf), prov, cfg, base_lr=0.1, seed=0,
+            engine="scan", sparse_grads=sparse,
+        )
+        state = tr.init_state()
+        state, _ = tr.run_megabatch(state)  # warmup/compile
+        n_rounds = 0
+        t0 = time.perf_counter()
+        for _ in range(n_megabatches):
+            state, info = tr.run_megabatch(state)
+            n_rounds += info["n_rounds"]
+        dt = time.perf_counter() - t0
+        rows.append({
+            "mode": "end_to_end", "path": "sparse" if sparse else "dense",
+            "nf": nf, "megabatches": n_megabatches, "rounds": n_rounds,
+            "wall_s": dt, "megabatches_per_s": n_megabatches / dt,
+            "steps_per_s": n_rounds / dt,
+        })
+    return rows
+
+
+def _make_model_dict(nf: int) -> dict:
+    from repro.models.xml_mlp import make_model
+
+    return make_model(XMLMLPConfig(n_features=nf, n_classes=N_CLASSES,
+                                   hidden=HIDDEN))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=30)
+    ap.add_argument("--megabatches", type=int, default=4)
+    ap.add_argument("--out", default="BENCH_spmm_grad.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    print(f"{'mode':<16} {'path':<7} {'NF':>8} {'wall_s':>8} {'steps/s':>10}")
+    for nf in NF_SWEEP:
+        for row in bench_step(nf, args.repeats):
+            rows.append(row)
+            print(f"{row['mode']:<16} {row['path']:<7} {nf:>8} "
+                  f"{row['wall_s']:>8.3f} {row['steps_per_s']:>10.1f}")
+    for nf in E2E_NF:
+        for row in bench_end_to_end(nf, args.megabatches):
+            rows.append(row)
+            print(f"{row['mode']:<16} {row['path']:<7} {nf:>8} "
+                  f"{row['wall_s']:>8.3f} {row['steps_per_s']:>10.1f}")
+
+    speedups = {}
+    for row in rows:
+        if row["path"] != "sparse":
+            continue
+        dense = next(
+            r for r in rows
+            if r["mode"] == row["mode"] and r["nf"] == row["nf"]
+            and r["path"] == "dense"
+        )
+        speedups[f"{row['mode']}_nf{row['nf']}"] = (
+            row["steps_per_s"] / dense["steps_per_s"]
+        )
+    for k, v in speedups.items():
+        print(f"sparse/dense speedup {k}: {v:.2f}x")
+
+    out = {
+        "benchmark": "spmm_grad",
+        "batch": {"b": B, "k": K, "hidden": HIDDEN, "n_classes": N_CLASSES},
+        "backend": jax.default_backend(),
+        "rows": rows,
+        "speedup_sparse_over_dense": speedups,
+    }
+    path = os.path.join(os.path.dirname(os.path.dirname(__file__)), args.out)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

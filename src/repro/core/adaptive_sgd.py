@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from typing import Any, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -102,6 +103,7 @@ def normalized_merge(
     global_model: Optional[PyTree],
     prev_global: Optional[PyTree],
     gamma: float,
+    use_kernel: Optional[bool] = None,
 ) -> PyTree:
     """Lines 11-12: w' = sum_i alpha_i w_i + gamma (w̄ - w̄_p).
 
@@ -110,8 +112,22 @@ def normalized_merge(
     When global/prev are None (memory-lean mode for the >=398B archs, paper
     §4 "it can even be done directly on the model replicas"), the momentum
     term is skipped.
+
+    ``use_kernel`` — route the O(|w|) tensor math through the fused
+    weighted-merge Pallas kernel (kernels/weighted_merge): the R-way
+    scale+add and the momentum term read every replica shard once from HBM.
+    None = auto: kernel on accelerator backends, jnp on CPU (the fallback
+    and differential oracle).
     """
     alphas = jnp.asarray(alphas, jnp.float32)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() in ("tpu", "gpu")
+    if use_kernel:
+        from repro.kernels.weighted_merge.ops import merge_pytree
+
+        if global_model is None or prev_global is None or gamma == 0.0:
+            return merge_pytree(replicas, alphas)
+        return merge_pytree(replicas, alphas, global_model, prev_global, gamma)
     merged = tu.tree_weighted_sum_replicas(replicas, alphas)
     if global_model is None or prev_global is None or gamma == 0.0:
         return merged

@@ -13,7 +13,11 @@ Algorithms (paper §5.1):
 
 The trainer is model-agnostic: a *model* is ``{'init': rng->params,
 'loss_fn': (params, batch)->(loss, aux)}`` and a *provider* supplies padded
-fixed-slot batches (data/providers.py). Distribution: the same jitted round
+fixed-slot batches (data/providers.py). A model may additionally expose
+``'sparse_grad_fn': (params, batch) -> ((loss, aux), grads)`` with
+embedding-style grad leaves as RowSparseGrad (DESIGN.md §3) — the trainer
+then runs the row-sparse update path (``sparse_grads=False`` forces dense
+autodiff, the differential oracle). Distribution: the same jitted round
 function runs single-device (tests) or sharded — leaves carry a leading
 replica dim R which the launcher shards over the replica mesh axis.
 
@@ -41,6 +45,7 @@ from repro.configs.base import ElasticConfig
 from repro.core import adaptive_sgd as asgd
 from repro.core.heterogeneity import CostModel, SpeedModel
 from repro.core.scheduler import DynamicScheduler, MegaBatchPlan
+from repro.optim.row_sparse import densify_tree
 from repro.optim.sgd import SGDConfig, init_momentum, sgd_update
 from repro.utils import tree as tu
 from repro.utils.logging import MetricsLog, log
@@ -80,6 +85,9 @@ class ElasticTrainer:
     keep_global_copies: bool = True  # False = paper §4 memory-lean merging
     engine: str = "scan"             # 'scan' | 'legacy_loop' (see module doc)
     round_bucket: bool = True        # pad n_rounds to pow2: bounds recompiles
+    sparse_grads: bool = True        # use the model's row-sparse grad path if
+                                     # it provides one; False = dense autodiff
+                                     # (the differential oracle, DESIGN.md §3)
     seed: int = 0
 
     def __post_init__(self):
@@ -96,7 +104,11 @@ class ElasticTrainer:
     # ------------------------------------------------------------------
     def _build_jits(self):
         loss_fn = self.model["loss_fn"]
-        grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+        # Sparse-gradient path (DESIGN.md §3): the model may expose
+        # ((loss, aux), grads) directly, with embedding-style grads as
+        # RowSparseGrad leaves — same calling convention as value_and_grad.
+        sparse_fn = self.model.get("sparse_grad_fn") if self.sparse_grads else None
+        grad_fn = sparse_fn or jax.value_and_grad(loss_fn, has_aux=True)
 
         def _crossbow_correct(replicas, c):
             center = tu.tree_map(
@@ -120,6 +132,9 @@ class ElasticTrainer:
             scan for the device-resident engine, jitted alone for legacy)."""
             (loss, aux), grads = jax.vmap(grad_fn)(replicas, batch)
             if avg_grads:  # gradient aggregation: all replicas share the mean
+                # replicas see different batches, so row-sparse grads have no
+                # common row set to average over — densify before the mean
+                grads = densify_tree(grads)
                 grads = tu.tree_map(
                     lambda g: jnp.broadcast_to(
                         jnp.mean(g, axis=0, keepdims=True), g.shape

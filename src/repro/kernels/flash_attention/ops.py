@@ -6,13 +6,15 @@ import jax
 from .flash_attention import flash_attention as _kernel
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _interpret_mode() -> bool:
+    # This kernel uses TPU-specific Mosaic constructs (pltpu.* grid specs /
+    # scratch) with no GPU (Triton) lowering: native mode is TPU-only
+    return jax.default_backend() != "tpu"
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128, block_k=128):
     """GQA-native flash attention. q (B,Sq,Hq,hd); k/v (B,Skv,Hkv,hd)."""
     return _kernel(
         q, k, v, causal=causal, window=window,
-        block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+        block_q=block_q, block_k=block_k, interpret=_interpret_mode(),
     )

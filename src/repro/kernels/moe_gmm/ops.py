@@ -6,13 +6,15 @@ import jax
 from .moe_gmm import moe_ffn_gmm as _kernel
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _interpret_mode() -> bool:
+    # This kernel uses TPU-specific Mosaic constructs (pltpu.* grid specs /
+    # scratch) with no GPU (Triton) lowering: native mode is TPU-only
+    return jax.default_backend() != "tpu"
 
 
 def moe_ffn_gmm(buf, wi, wg, wo, block_c: int = 128, block_f: int = 512):
     """Fused SwiGLU grouped matmul. buf (E,C,D) -> (E,C,D)."""
     return _kernel(
         buf, wi, wg, wo,
-        block_c=block_c, block_f=block_f, interpret=not _on_tpu(),
+        block_c=block_c, block_f=block_f, interpret=_interpret_mode(),
     )

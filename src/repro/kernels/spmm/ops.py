@@ -1,21 +1,75 @@
-"""Public entrypoint for the SpMM kernel (sparse XML input layer)."""
+"""Public entrypoint for the SpMM kernel (sparse XML input layer).
+
+``spmm`` carries a ``jax.custom_vjp``: the forward is the scalar-prefetch
+row-gather kernel (spmm.py) and the backward is the sorted scatter-add
+kernel ``spmm_grad_w`` plus the cheap d``feat_val`` gather-dot — both sides
+of the paper's "SpMM + its transpose dominate per-update cost" observation
+run TPU-native (DESIGN.md §2/§3). ``feat_idx``/``feat_mask`` are integral
+and get symbolic-zero (float0) cotangents.
+
+Interpret gating: these kernels are built on TPU-specific Mosaic
+constructs (``pltpu.PrefetchScalarGridSpec``), which the GPU (Triton)
+lowering does not implement — so native mode is TPU-only and every other
+backend runs interpret mode (kernel bodies still run, so correctness is
+validated on every platform / in CI).
+"""
 from __future__ import annotations
 
+import functools
+
 import jax
+import numpy as np
 
 from .spmm import spmm as _spmm_kernel
+from .spmm import spmm_grad_w as _spmm_grad_w_kernel
+from .ref import spmm_grad_val_ref
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _interpret_mode() -> bool:
+    return jax.default_backend() != "tpu"
 
 
 def spmm(feat_idx, feat_val, feat_mask, w, block_h: int = 512, block_k: int = 8):
-    """Padded-COO batch x dense W. Returns (B, H) in W's dtype.
+    """Padded-COO batch x dense W. Returns (B, H) in W's dtype. Differentiable
+    w.r.t. ``feat_val`` and ``w`` (custom VJP, Pallas both ways).
 
     ``block_k`` = embedding rows gathered per grid step (DESIGN.md §2:
     K-blocked gather; 1 recovers the one-row-per-step formulation)."""
+    return _spmm(feat_idx, feat_val, feat_mask, w, int(block_h), int(block_k))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _spmm(feat_idx, feat_val, feat_mask, w, block_h, block_k):
     return _spmm_kernel(
         feat_idx, feat_val, feat_mask, w,
-        block_h=block_h, block_k=block_k, interpret=not _on_tpu(),
+        block_h=block_h, block_k=block_k, interpret=_interpret_mode(),
+    )
+
+
+def _spmm_fwd(feat_idx, feat_val, feat_mask, w, block_h, block_k):
+    out = _spmm(feat_idx, feat_val, feat_mask, w, block_h, block_k)
+    return out, (feat_idx, feat_val, feat_mask, w)
+
+
+def _spmm_bwd(block_h, block_k, res, dh):
+    feat_idx, feat_val, feat_mask, w = res
+    dw = spmm_grad_w(
+        feat_idx, feat_val, feat_mask, dh, w.shape[0], block_h=block_h
+    ).astype(w.dtype)
+    # d feat_val: gather-dot, same O(B*K*H) footprint as the forward
+    dval = spmm_grad_val_ref(feat_idx, feat_mask, w, dh).astype(feat_val.dtype)
+    f0 = lambda x: np.zeros(x.shape, jax.dtypes.float0)  # integral primals
+    return f0(feat_idx), dval, f0(feat_mask), dw
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+def spmm_grad_w(feat_idx, feat_val, feat_mask, dh, n_rows: int,
+                block_h: int = 512):
+    """Standalone transpose-SpMM: scatter-add ``scale[b,k] * dh[b]`` into the
+    gathered rows. Returns (n_rows, H) f32."""
+    return _spmm_grad_w_kernel(
+        feat_idx, feat_val, feat_mask, dh, int(n_rows),
+        block_h=block_h, interpret=_interpret_mode(),
     )

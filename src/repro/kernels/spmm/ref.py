@@ -14,3 +14,23 @@ def spmm_ref(feat_idx, feat_val, feat_mask, w):
     rows = w[feat_idx].astype(jnp.float32)                     # (B, K, H)
     scale = (feat_val * feat_mask).astype(jnp.float32)[..., None]
     return jnp.sum(rows * scale, axis=1).astype(w.dtype)       # (B, H)
+
+
+def spmm_grad_w_ref(feat_idx, feat_val, feat_mask, dh, n_rows):
+    """Transpose of spmm_ref: dW[r] = sum_{idx[b,k]=r} scale[b,k]*dh[b]."""
+    b, k = feat_idx.shape
+    scale = (feat_val * feat_mask).astype(jnp.float32)         # (B, K)
+    vals = scale[..., None] * dh.astype(jnp.float32)[:, None, :]
+    h = dh.shape[1]
+    return (
+        jnp.zeros((n_rows, h), jnp.float32)
+        .at[feat_idx.reshape(-1)]
+        .add(vals.reshape(b * k, h))
+    )
+
+
+def spmm_grad_val_ref(feat_idx, feat_mask, w, dh):
+    """d feat_val[b,k] = mask[b,k] * <dh[b], W[idx[b,k]]>."""
+    rows = w[feat_idx].astype(jnp.float32)                     # (B, K, H)
+    dv = jnp.einsum("bkh,bh->bk", rows, dh.astype(jnp.float32))
+    return dv * feat_mask

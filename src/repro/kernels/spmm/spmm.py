@@ -24,6 +24,16 @@ gather + dense accumulate**, K-blocked:
 Zero-padding slots contribute 0 via the mask; idx of padded slots may be
 anything in range (the gathered row is multiplied by 0). K is padded up to
 a multiple of ``block_k`` with zero-scale slots.
+
+The **backward** (DESIGN.md §3) is the transpose: ``spmm_grad_w`` is a
+scatter-add of ``scale[b,k] * dh[b]`` into the gathered rows. Write
+conflicts (the same embedding row touched by many (b, k) slots) are handled
+by sorting the flattened nnz slots by row id first, so all updates to one
+output row occupy *consecutive* grid steps and the f32 accumulator tile
+stays resident in VMEM for exactly the run of that row — the out index_map
+revisits a block only consecutively, which is the one revisit pattern the
+Pallas pipeline guarantees. Rows never touched keep the zeros of the
+aliased initializer (``input_output_aliases``).
 """
 from __future__ import annotations
 
@@ -109,3 +119,85 @@ def spmm(
         interpret=interpret,
     )(feat_idx.astype(jnp.int32), scale, *([w] * block_k))
     return out[:, :h].astype(w.dtype)
+
+
+# --------------------------------------------------------------------------
+# backward: dW scatter-add (sorted formulation, DESIGN.md §3)
+# --------------------------------------------------------------------------
+
+
+def _grad_w_kernel(rows_ref, samp_ref, scale_ref, dh_ref, init_ref, out_ref):
+    """Grid (nH, S): for sorted nnz slot si, accumulate scale*dh[sample] into
+    the out row ``rows[si]``. rows/samp are scalar-prefetched (SMEM); the out
+    tile is revisited (and stays in VMEM) for the whole run of equal rows."""
+    del init_ref  # aliased to out: only its zeros for untouched rows matter
+    si = pl.program_id(1)
+    prev = rows_ref[jnp.maximum(si - 1, 0)]
+
+    @pl.when((si == 0) | (rows_ref[si] != prev))
+    def _start_row_run():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += scale_ref[0, 0] * dh_ref[...].astype(jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_rows", "block_h", "interpret")
+)
+def spmm_grad_w(
+    feat_idx: jax.Array,    # (B, K) int32
+    feat_val: jax.Array,    # (B, K) float
+    feat_mask: jax.Array,   # (B, K) bool
+    dh: jax.Array,          # (B, H) cotangent of the spmm output
+    n_rows: int,            # NF
+    *,
+    block_h: int = DEFAULT_BLOCK_H,
+    interpret: bool = False,
+) -> jax.Array:
+    """dW[r] = sum_{(b,k): idx[b,k]=r} val[b,k]*mask[b,k]*dh[b]. Returns
+    (NF, H) f32. Sorting the S = B*K slots by row id makes duplicate-row
+    updates consecutive (write-conflict handling); zero-scale (masked /
+    padded) slots scatter 0 wherever their idx points, so no sentinel is
+    needed and every index stays in range."""
+    b, k = feat_idx.shape
+    s = b * k
+    h = dh.shape[1]
+    flat = feat_idx.reshape(s).astype(jnp.int32)
+    order = jnp.argsort(flat)
+    rows_s = flat[order]
+    samp_s = (order // k).astype(jnp.int32)
+    scale = (feat_val * feat_mask).astype(jnp.float32).reshape(s)
+    scale_s = scale[order].reshape(s, 1)
+
+    block_h = min(block_h, h)
+    pad_h = (-h) % block_h
+    dh32 = dh.astype(jnp.float32)
+    if pad_h:
+        dh32 = jnp.pad(dh32, ((0, 0), (0, pad_h)))
+    hp = h + pad_h
+    init = jnp.zeros((n_rows, hp), jnp.float32)
+
+    out = pl.pallas_call(
+        _grad_w_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,  # rows_s, samp_s
+            grid=(hp // block_h, s),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda hi, si, rows, samp: (si, 0)),
+                # dh row of the sample owning slot si — prefetch-driven gather
+                pl.BlockSpec(
+                    (1, block_h), lambda hi, si, rows, samp: (samp[si], hi)
+                ),
+                # zero initializer, aliased to the output buffer; ANY = no
+                # per-step DMA — only its (aliased) HBM zeros matter
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, block_h), lambda hi, si, rows, samp: (rows[si], hi)
+            ),
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_rows, hp), jnp.float32),
+        input_output_aliases={4: 0},  # init (input 4, after the 2 prefetch + 2 ops)
+        interpret=interpret,
+    )(rows_s, samp_s, scale_s, dh32, init)
+    return out[:, :h]

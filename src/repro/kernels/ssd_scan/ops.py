@@ -6,10 +6,12 @@ import jax
 from .ssd_scan import ssd_scan as _kernel
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _interpret_mode() -> bool:
+    # This kernel uses TPU-specific Mosaic constructs (pltpu.* grid specs /
+    # scratch) with no GPU (Triton) lowering: native mode is TPU-only
+    return jax.default_backend() != "tpu"
 
 
 def ssd_scan(x, dA, Bm, Cm, chunk: int = 256):
     """Chunked SSD scan. Returns (y (B,L,H,P) f32, final (B,H,P,N) f32)."""
-    return _kernel(x, dA, Bm, Cm, chunk=chunk, interpret=not _on_tpu())
+    return _kernel(x, dA, Bm, Cm, chunk=chunk, interpret=_interpret_mode())

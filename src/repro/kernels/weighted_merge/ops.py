@@ -1,9 +1,10 @@
 """Public entrypoint for the weighted-merge kernel.
 
-``merge(replicas, alphas, ...)`` dispatches to the Pallas kernel on TPU and
-to interpret mode elsewhere (CPU CI): the kernel *body* runs in Python either
+``merge(replicas, alphas, ...)`` runs the Pallas kernel natively on TPU/GPU
+and in interpret mode on CPU (CI): the kernel *body* runs in Python either
 way, so correctness is validated on every platform. ``merge_pytree`` applies
-the kernel leaf-wise over a replica-stacked param pytree.
+the kernel leaf-wise over a replica-stacked param pytree; it is what
+``asgd.normalized_merge`` routes through on accelerator backends.
 """
 from __future__ import annotations
 
@@ -13,15 +14,16 @@ import jax.numpy as jnp
 from .weighted_merge import weighted_merge
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+def _interpret_mode() -> bool:
+    # Pallas lowers natively on TPU and GPU; only CPU needs interpret mode
+    return jax.default_backend() == "cpu"
 
 
 def merge(replicas, alphas, g=None, gp=None, gamma: float = 0.0, block_n=2048):
     """replicas (R, N); alphas (R,). Returns merged (N,)."""
     return weighted_merge(
         replicas, alphas, g, gp, gamma,
-        block_n=block_n, interpret=not _on_tpu(),
+        block_n=block_n, interpret=_interpret_mode(),
     )
 
 

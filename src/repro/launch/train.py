@@ -75,6 +75,9 @@ def main(argv=None):
     ap.add_argument("--engine", default="scan", choices=list(ENGINES),
                     help="mega-batch executor: device-resident scan (default)"
                          " or the per-round host loop")
+    ap.add_argument("--dense-grads", action="store_true",
+                    help="force dense autodiff instead of the row-sparse"
+                         " gradient path (the differential oracle)")
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--megabatches", type=int, default=10)
     ap.add_argument("--mega-batch", type=int, default=20,
@@ -109,7 +112,7 @@ def main(argv=None):
     trainer = ElasticTrainer(
         model=model, provider=provider, cfg=ecfg,
         sgd=SGDConfig(), base_lr=args.lr, speed=speed, seed=args.seed,
-        engine=args.engine,
+        engine=args.engine, sparse_grads=not args.dense_grads,
     )
     state, mlog = trainer.run(
         args.megabatches, test_batches=test_batches, verbose=True

@@ -3,19 +3,30 @@
 Architecture (identical to the SLIDE testbed the paper adopts): sparse input
 layer -> hidden ReLU layer -> softmax output over the (huge) label space,
 with cross-entropy loss. The input layer is a sparse-dense matmul
-(cuSPARSE SpMM in the paper; our Pallas ``spmm`` kernel on TPU — pure-jnp
-gather fallback here).
+(cuSPARSE SpMM in the paper; our Pallas ``spmm`` kernel on TPU, with the
+pure-jnp gather as the fallback on every other backend and the
+differential oracle).
 
 Batch layout: padded COO (see data/sparse.py). The ``sample_mask`` makes the
 effective batch size adaptive while shapes stay static.
+
+Training runs the **sparse-gradient path** (DESIGN.md §3) by default:
+``loss_and_sparse_grad`` splits the loss at the input layer's output, pulls
+the head cotangent ``dh`` back with ``jax.vjp``, and emits d``w1`` directly
+as a RowSparseGrad — ``vals[b,k] = val[b,k]*mask[b,k] * dh[b]`` on rows
+``idx[b,k]`` — so no dense (NF, H) gradient is ever materialized. The dense
+autodiff path (``loss_fn`` under ``jax.value_and_grad``) is retained as the
+oracle.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.optim.row_sparse import RowSparseGrad
 
 
 @dataclass(frozen=True)
@@ -24,7 +35,18 @@ class XMLMLPConfig:
     n_classes: int
     hidden: int = 128
     dtype: Any = jnp.float32
-    use_spmm_kernel: bool = False  # route input layer through Pallas spmm
+    # route the input layer through the Pallas spmm kernel (forward + custom
+    # VJP). None = auto: kernel where it lowers natively (TPU), jnp gather
+    # elsewhere (interpret-mode Pallas is validated by the kernel tests, not
+    # run in training loops).
+    use_spmm_kernel: Optional[bool] = None
+    sparse_grads: bool = True  # expose the row-sparse d w1 path to the trainer
+
+
+def _kernel_routed(cfg: XMLMLPConfig) -> bool:
+    if cfg.use_spmm_kernel is None:
+        return jax.default_backend() == "tpu"
+    return cfg.use_spmm_kernel
 
 
 def init_params(cfg: XMLMLPConfig, rng: jax.Array) -> dict:
@@ -42,20 +64,17 @@ def init_params(cfg: XMLMLPConfig, rng: jax.Array) -> dict:
     }
 
 
-def forward(cfg: XMLMLPConfig, params: dict, batch: dict) -> jax.Array:
-    """Return logits (B, n_classes)."""
-    if cfg.use_spmm_kernel:
+def _input_layer(cfg: XMLMLPConfig, w1: jax.Array, batch: dict) -> jax.Array:
+    """The sparse input layer: h_lin (B, hidden)."""
+    if _kernel_routed(cfg):
         from repro.kernels.spmm import ops as spmm_ops
 
-        h = spmm_ops.spmm(
-            batch["feat_idx"], batch["feat_val"], batch["feat_mask"], params["w1"]
+        return spmm_ops.spmm(
+            batch["feat_idx"], batch["feat_val"], batch["feat_mask"], w1
         )
-    else:
-        h = _sparse_input_ref(
-            batch["feat_idx"], batch["feat_val"], batch["feat_mask"], params["w1"]
-        )
-    h = jax.nn.relu(h + params["b1"])
-    return h @ params["w2"] + params["b2"]
+    return _sparse_input_ref(
+        batch["feat_idx"], batch["feat_val"], batch["feat_mask"], w1
+    )
 
 
 def _sparse_input_ref(feat_idx, feat_val, feat_mask, w1):
@@ -65,14 +84,15 @@ def _sparse_input_ref(feat_idx, feat_val, feat_mask, w1):
     return jnp.sum(rows * scale, axis=1)
 
 
-def loss_fn(cfg: XMLMLPConfig, params: dict, batch: dict):
-    """Masked multi-label softmax cross-entropy + top-1 accuracy.
+def _head_loss(h_lin: jax.Array, rest: dict, batch: dict):
+    """From the input layer's output to (loss, aux).
 
-    Loss per sample = mean over its true labels of -log p(label); batch loss
-    is averaged over *valid* samples only (adaptive batch size).
-    Returns (loss, aux) with aux = dict(accuracy, n_valid).
+    Masked multi-label softmax cross-entropy + top-1 accuracy. Loss per
+    sample = mean over its true labels of -log p(label); batch loss is
+    averaged over *valid* samples only (adaptive batch size).
     """
-    logits = forward(cfg, params, batch).astype(jnp.float32)
+    h = jax.nn.relu(h_lin + rest["b1"])
+    logits = (h @ rest["w2"] + rest["b2"]).astype(jnp.float32)
     logp = jax.nn.log_softmax(logits, axis=-1)
     lab_logp = jnp.take_along_axis(logp, batch["label_idx"], axis=-1)
     lmask = batch["label_mask"].astype(jnp.float32)
@@ -91,10 +111,58 @@ def loss_fn(cfg: XMLMLPConfig, params: dict, batch: dict):
     return loss, {"accuracy": acc, "n_valid": n_valid}
 
 
+def forward(cfg: XMLMLPConfig, params: dict, batch: dict) -> jax.Array:
+    """Return logits (B, n_classes)."""
+    h = jax.nn.relu(_input_layer(cfg, params["w1"], batch) + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def loss_fn(cfg: XMLMLPConfig, params: dict, batch: dict):
+    """Dense-path loss: differentiate with jax.value_and_grad (the oracle).
+    Returns (loss, aux) with aux = dict(accuracy, n_valid)."""
+    rest = {k: v for k, v in params.items() if k != "w1"}
+    h_lin = _input_layer(cfg, params["w1"], batch)
+    return _head_loss(h_lin, rest, batch)
+
+
+def loss_and_sparse_grad(cfg: XMLMLPConfig, params: dict, batch: dict):
+    """Sparse-gradient step math: ((loss, aux), grads) with d w1 row-sparse.
+
+    d w1 flows only through the input layer, whose VJP w.r.t. w1 is
+    analytically ``dW[idx[b,k]] += scale[b,k] * dh[b]`` — exactly the
+    RowSparseGrad layout, so we pull ``dh`` back through the head with
+    jax.vjp and never build the dense (NF, H) gradient. Masked/padded nnz
+    slots get the out-of-bounds sentinel row NF (scatter drops them).
+    """
+    rest = {k: v for k, v in params.items() if k != "w1"}
+    h_lin = _input_layer(cfg, params["w1"], batch)
+    loss, head_vjp, aux = jax.vjp(
+        lambda h, r: _head_loss(h, r, batch), h_lin, rest, has_aux=True
+    )
+    dh, drest = head_vjp(jnp.ones_like(loss))
+
+    scale = (batch["feat_val"] * batch["feat_mask"]).astype(jnp.float32)
+    b, k = scale.shape
+    vals = scale[..., None] * dh.astype(jnp.float32)[:, None, :]  # (B, K, H)
+    rows = jnp.where(
+        batch["feat_mask"], batch["feat_idx"], cfg.n_features
+    ).astype(jnp.int32)
+    grads = dict(drest)
+    grads["w1"] = RowSparseGrad(
+        rows.reshape(b * k), vals.reshape(b * k, -1), cfg.n_features
+    )
+    return (loss, aux), grads
+
+
 def make_model(cfg: XMLMLPConfig):
-    """Bundle (init, loss) in the trainer's model protocol."""
-    return {
+    """Bundle (init, loss[, sparse_grad]) in the trainer's model protocol."""
+    model = {
         "init": lambda rng: init_params(cfg, rng),
         "loss_fn": lambda params, batch: loss_fn(cfg, params, batch),
         "config": cfg,
     }
+    if cfg.sparse_grads:
+        model["sparse_grad_fn"] = (
+            lambda params, batch: loss_and_sparse_grad(cfg, params, batch)
+        )
+    return model

@@ -1,0 +1,97 @@
+"""Row-sparse gradient representation for embedding-style parameters.
+
+The XML input layer touches only the ~B*K embedding rows gathered by a
+batch, so its gradient is row-sparse: ``RowSparseGrad`` carries the touched
+``rows`` and the per-slot row gradients ``vals`` as an *unreduced* padded
+COO — duplicates allowed (two nnz slots hitting the same row stay two
+entries; scatter-add reduces them), static shapes everywhere so the value
+survives ``vmap`` over replicas and ``jax.lax.scan`` over rounds. Slots
+whose row id is >= ``n_rows`` are padding sentinels: JAX drops out-of-bound
+scatter updates, so they vanish without a select.
+
+This is the device-side half of the paper's sparsity story (DESIGN.md §3):
+the backward produces O(B*K*H) values instead of a dense (NF, H) gradient,
+and the optimizer (optim/sgd.py) scatters only the touched rows.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class RowSparseGrad:
+    """Gradient of a (..., n_rows, H) parameter, touched rows only.
+
+    rows: (..., S) int32 — row ids; >= n_rows marks a padded/masked slot.
+    vals: (..., S, H)    — per-slot row gradient (unreduced; duplicates add).
+    n_rows: static int   — the dense row count NF.
+
+    Leading dims (replica, scan, ...) broadcast with the parameter's.
+    """
+
+    rows: jax.Array
+    vals: jax.Array
+    n_rows: int
+
+    def tree_flatten(self):
+        return (self.rows, self.vals), self.n_rows
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], children[1], aux)
+
+    def densify(self) -> jax.Array:
+        """Scatter-add into a dense (..., n_rows, H) f32 array (the oracle
+        form; also used for cross-replica gradient averaging in sync)."""
+
+        def one(rows, vals):
+            h = vals.shape[-1]
+            return (
+                jnp.zeros((self.n_rows, h), jnp.float32)
+                .at[rows]
+                .add(vals.astype(jnp.float32))
+            )
+
+        fn = one
+        for _ in range(self.rows.ndim - 1):
+            fn = jax.vmap(fn)
+        return fn(self.rows, self.vals)
+
+
+def is_row_sparse(x) -> bool:
+    return isinstance(x, RowSparseGrad)
+
+
+def densify_tree(grads: PyTree) -> PyTree:
+    """Replace every RowSparseGrad leaf with its dense scatter-add."""
+    return jax.tree_util.tree_map(
+        lambda g: g.densify() if is_row_sparse(g) else g,
+        grads,
+        is_leaf=is_row_sparse,
+    )
+
+
+def first_occurrence(rows: jax.Array, n_rows: int) -> jax.Array:
+    """(S,) f32: 1.0 at the first slot of each distinct in-bounds row id.
+
+    Per-row-once weights for the lazy weight-decay/momentum terms: with
+    duplicates, gather-modify-scatter would apply a per-row term once per
+    *slot*; multiplying by this mask applies it once per *row*. Sentinel
+    (out-of-bounds) slots get 0.
+    """
+    order = jnp.argsort(rows)
+    sorted_rows = rows[order]
+    first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_rows[1:] != sorted_rows[:-1]]
+    )
+    first = jnp.zeros(rows.shape, jnp.float32).at[order].set(
+        first_sorted.astype(jnp.float32)
+    )
+    return first * (rows < n_rows)

@@ -131,6 +131,28 @@ class TestNormalizedMerging:
         out = asgd.normalized_merge(replicas, jnp.array([0.25, 0.75]), None, None, 0.9)
         np.testing.assert_allclose(np.asarray(out["w"]), 3.5, rtol=1e-6)
 
+    def test_merge_kernel_path_matches_jnp(self):
+        """The weighted_merge Pallas routing (accelerator path; interpret
+        mode here) must agree with the jnp oracle, with and without the
+        momentum term."""
+        rng = np.random.default_rng(0)
+        replicas = {
+            "w": jnp.asarray(rng.normal(size=(3, 8, 16)), jnp.float32),
+            "b": jnp.asarray(rng.normal(size=(3, 16)), jnp.float32),
+        }
+        alphas = jnp.asarray([0.2, 0.3, 0.5], jnp.float32)
+        g = {k: v[0] * 1.5 for k, v in replicas.items()}
+        gp = {k: v[1] * 0.5 for k, v in replicas.items()}
+        for args in ((None, None, 0.0), (g, gp, 0.9)):
+            want = asgd.normalized_merge(replicas, alphas, *args, use_kernel=False)
+            got = asgd.normalized_merge(replicas, alphas, *args, use_kernel=True)
+            for lw, lg in zip(
+                jax.tree_util.tree_leaves(want), jax.tree_util.tree_leaves(got)
+            ):
+                np.testing.assert_allclose(
+                    np.asarray(lg), np.asarray(lw), rtol=1e-5, atol=1e-6
+                )
+
     @given(
         alphas=st.lists(st.floats(0.01, 1.0), min_size=2, max_size=6),
         vals=st.lists(st.floats(-10, 10), min_size=2, max_size=6),

@@ -1,8 +1,10 @@
-"""Optimizer: per-replica lr vectors, masked updates, clipping, schedules."""
+"""Optimizer: per-replica lr vectors, masked updates, clipping, schedules,
+and the row-sparse update path (DESIGN.md §3)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.optim.row_sparse import RowSparseGrad, first_occurrence
 from repro.optim.schedules import cosine_decay, linear_scaled_lr, rescale_lr, warmup_factor
 from repro.optim.sgd import SGDConfig, clip_by_global_norm, init_momentum, sgd_update
 
@@ -69,6 +71,102 @@ class TestSGD:
         g = {"w": jnp.zeros((2,))}
         new, _ = sgd_update(p, g, 0.1, SGDConfig(weight_decay=0.5))
         np.testing.assert_allclose(np.asarray(new["w"]), 1 - 0.1 * 0.5, rtol=1e-6)
+
+
+def _sparse_case(R=2, NF=30, H=4, S=8, seed=0, sentinel=True):
+    rng = np.random.default_rng(seed)
+    p = {"w1": jnp.asarray(rng.normal(size=(R, NF, H)), jnp.float32)}
+    rows = rng.integers(0, NF, (R, S)).astype(np.int32)
+    rows[:, 1] = rows[:, 0]  # duplicate rows in every replica
+    vals = rng.normal(size=(R, S, H)).astype(np.float32)
+    if sentinel:
+        rows[:, -1] = NF     # padded slot: dropped by the scatter
+        vals[:, -1] = 0.0
+    g = {"w1": RowSparseGrad(jnp.asarray(rows), jnp.asarray(vals), NF)}
+    return p, g, rows, vals
+
+
+class TestRowSparseSGD:
+    def test_plain_matches_densified(self):
+        """The paper's local update (plain SGD) must match the dense oracle."""
+        p, g, _, _ = _sparse_case()
+        lr = jnp.asarray([0.1, 0.4])
+        mask = jnp.asarray([1.0, 0.0])
+        dense = {"w1": g["w1"].densify()}
+        ns, _ = sgd_update(p, g, lr, SGDConfig(), update_mask=mask, replica_dim=True)
+        nd, _ = sgd_update(p, dense, lr, SGDConfig(), update_mask=mask, replica_dim=True)
+        np.testing.assert_allclose(
+            np.asarray(ns["w1"]), np.asarray(nd["w1"]), rtol=1e-6, atol=1e-7
+        )
+        # masked replica is frozen bit-exactly
+        np.testing.assert_array_equal(np.asarray(ns["w1"][1]), np.asarray(p["w1"][1]))
+
+    def test_unbatched_leaf(self):
+        p, g, rows, vals = _sparse_case(R=1)
+        p1 = {"w1": p["w1"][0]}
+        g1 = {"w1": RowSparseGrad(jnp.asarray(rows[0]), jnp.asarray(vals[0]), 30)}
+        ns, _ = sgd_update(p1, g1, 0.2, SGDConfig())
+        want = np.asarray(p1["w1"]) - 0.2 * np.asarray(g1["w1"].densify())
+        np.testing.assert_allclose(np.asarray(ns["w1"]), want, rtol=1e-6, atol=1e-7)
+
+    def test_lazy_momentum_touched_rows_exact(self):
+        """Touched rows follow the dense rule m' = mu*m + g; untouched rows
+        keep their momentum (lazy, documented in DESIGN.md §3)."""
+        cfg = SGDConfig(momentum=0.9)
+        p, g, rows, vals = _sparse_case()
+        m0 = init_momentum(p, cfg)
+        m0 = {"w1": m0["w1"] + 0.5}  # nonzero so laziness is observable
+        ns, ms = sgd_update(p, g, 0.1, cfg, momentum_state=m0, replica_dim=True)
+        dense_m = 0.9 * 0.5 + np.asarray(g["w1"].densify())
+        for r in range(2):
+            touched = np.zeros(30, bool)
+            touched[rows[r][rows[r] < 30]] = True
+            np.testing.assert_allclose(
+                np.asarray(ms["w1"][r])[touched], dense_m[r][touched],
+                rtol=1e-5, atol=1e-6,
+            )
+            # lazy: untouched rows neither decay momentum nor move params
+            np.testing.assert_allclose(np.asarray(ms["w1"][r])[~touched], 0.5)
+            np.testing.assert_array_equal(
+                np.asarray(ns["w1"][r])[~touched], np.asarray(p["w1"][r])[~touched]
+            )
+
+    def test_lazy_weight_decay_once_per_row(self):
+        """Duplicate rows must decay exactly once (first-occurrence mask)."""
+        cfg = SGDConfig(weight_decay=0.5)
+        p, g, rows, vals = _sparse_case()
+        ns, _ = sgd_update(p, g, 0.1, cfg, replica_dim=True)
+        want = np.asarray(p["w1"]).copy()
+        for r in range(2):
+            touched = np.zeros(30, bool)
+            touched[rows[r][rows[r] < 30]] = True
+            want[r] -= 0.1 * np.asarray(g["w1"].densify()[r])
+            want[r][touched] -= 0.1 * 0.5 * np.asarray(p["w1"][r])[touched]
+        np.testing.assert_allclose(np.asarray(ns["w1"]), want, rtol=1e-5, atol=1e-6)
+
+    def test_grad_clip_densifies(self):
+        """grad_clip needs the duplicate-reduced norm: result must equal the
+        dense path exactly."""
+        cfg = SGDConfig(grad_clip=0.7)
+        p, g, _, _ = _sparse_case()
+        dense = {"w1": g["w1"].densify()}
+        ns, _ = sgd_update(p, g, 0.1, cfg, replica_dim=True)
+        nd, _ = sgd_update(p, dense, 0.1, cfg, replica_dim=True)
+        np.testing.assert_allclose(
+            np.asarray(ns["w1"]), np.asarray(nd["w1"]), rtol=1e-6, atol=1e-7
+        )
+
+    def test_first_occurrence_mask(self):
+        rows = jnp.asarray([3, 3, 1, 5, 1, 7], jnp.int32)
+        got = np.asarray(first_occurrence(rows, n_rows=6))
+        np.testing.assert_array_equal(got, [1, 0, 1, 1, 0, 0])  # 7 = sentinel
+
+    def test_mixed_tree_dense_and_sparse(self):
+        p, g, _, _ = _sparse_case()
+        p["b"] = jnp.ones((2, 3))
+        g["b"] = jnp.full((2, 3), 2.0)
+        ns, _ = sgd_update(p, g, 0.5, SGDConfig(), replica_dim=True)
+        np.testing.assert_allclose(np.asarray(ns["b"]), 0.0)
 
 
 class TestSchedules:
