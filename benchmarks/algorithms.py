@@ -1,0 +1,75 @@
+"""Algorithm comparison benchmark: time-to-accuracy for every registered
+algorithm on the synthetic XML workload — the paper's headline experiment
+(Fig. 6), extended to whatever the core/algorithms registry contains
+(currently the paper's Adaptive SGD, the four baselines, and the
+ABS-SGD-style ``delayed_sync`` plugin).
+
+Every algorithm runs the same workload under the same heterogeneous
+virtual cluster; "time" is the discrete-event virtual clock, so results
+are deterministic and hardware-independent. Emits ``BENCH_algorithms.json``
+at the repo root so future PRs (and new registered algorithms) have a
+comparable trajectory.
+
+  PYTHONPATH=src python -m benchmarks.algorithms
+  PYTHONPATH=src python -m benchmarks.algorithms --megabatches 4   # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core import algorithms
+
+from .common import AMAZON, fmt, run_one, summarize
+
+# reachable by the averaging algorithms within the default budget on the
+# reduced-scale workload, so tta is a measured number, not a dash
+TARGET_ACC = 0.3
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--megabatches", type=int, default=20)
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--target", type=float, default=TARGET_ACC)
+    ap.add_argument("--engine", default="scan")
+    ap.add_argument("--out", default="BENCH_algorithms.json")
+    args = ap.parse_args(argv)
+
+    rows = []
+    print(f"{'algorithm':<14} {'best_acc':>9} {'tta(vt)':>9} "
+          f"{'mb_to_tgt':>9} {'virtual_time':>12}")
+    for algo in algorithms.available():
+        mlog = run_one(
+            AMAZON,
+            n_megabatches=args.megabatches,
+            algorithm=algo,
+            n_replicas=args.replicas,
+            engine=args.engine,
+        )
+        s = summarize(mlog, args.target)
+        row = {"algorithm": algo, **s}
+        rows.append(row)
+        print(f"{algo:<14} {fmt(s['best_acc']):>9} {fmt(s['tta']):>9} "
+              f"{fmt(s['megabatches_to_target']):>9} "
+              f"{fmt(s['virtual_time']):>12}")
+
+    out = {
+        "benchmark": "algorithms",
+        "workload": AMAZON.name,
+        "target_accuracy": args.target,
+        "megabatches": args.megabatches,
+        "n_replicas": args.replicas,
+        "engine": args.engine,
+        "rows": rows,
+    }
+    path = os.path.join(os.path.dirname(os.path.dirname(__file__)), args.out)
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

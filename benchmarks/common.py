@@ -14,6 +14,7 @@ from dataclasses import dataclass, replace as dc_replace
 import numpy as np
 
 from repro.configs.base import ElasticConfig
+from repro.core import algorithms
 from repro.core.heterogeneity import SpeedModel
 from repro.core.trainer import ElasticTrainer
 from repro.data.providers import SparseProvider
@@ -77,7 +78,7 @@ def build_trainer(
         XMLMLPConfig(n_features=w.n_features, n_classes=w.n_classes,
                      hidden=w.hidden)
     )
-    n_rep = 1 if algorithm == "single" else n_replicas
+    n_rep = algorithms.get(algorithm).resolve_n_replicas(n_replicas)
     cfg = ElasticConfig.from_bmax(b_max, algorithm=algorithm,
                                   n_replicas=n_rep, mega_batch=mega_batch)
     if beta is not None:

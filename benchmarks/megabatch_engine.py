@@ -72,7 +72,7 @@ def bench_engine_only(engine: str, n_replicas: int, repeats: int,
         # rebind the returned buffers: on TPU/GPU the scan engine DONATES
         # state.replicas/momentum, so reusing the old state would pass
         # deleted arrays on the next call
-        replicas, momentum, _, _ = run(state, plan, b_slots, False, 0.0)
+        replicas, momentum, _, _ = run(state, plan, b_slots, trainer._transforms)
         return replace(state, replicas=replicas, momentum=momentum)
 
     for _ in range(warmup):

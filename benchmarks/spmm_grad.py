@@ -145,7 +145,7 @@ def bench_end_to_end(nf: int, n_megabatches: int) -> list[dict]:
             B, algorithm="adaptive", n_replicas=4, mega_batch=8
         )
         tr = ElasticTrainer(
-            _make_model_dict(nf), prov, cfg, base_lr=0.1, seed=0,
+            _make_trainable_model(nf), prov, cfg, base_lr=0.1, seed=0,
             engine="scan", sparse_grads=sparse,
         )
         state = tr.init_state()
@@ -165,7 +165,7 @@ def bench_end_to_end(nf: int, n_megabatches: int) -> list[dict]:
     return rows
 
 
-def _make_model_dict(nf: int) -> dict:
+def _make_trainable_model(nf: int):
     from repro.models.xml_mlp import make_model
 
     return make_model(XMLMLPConfig(n_features=nf, n_classes=N_CLASSES,

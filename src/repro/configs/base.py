@@ -148,7 +148,9 @@ class ModelConfig:
 
 @dataclass(frozen=True)
 class ElasticConfig:
-    algorithm: str = "adaptive"  # adaptive | elastic | sync | crossbow | single
+    algorithm: str = "adaptive"  # any key in the core/algorithms registry
+                                 # (built-ins: adaptive | elastic | sync |
+                                 #  crossbow | single | delayed_sync)
     n_replicas: int = 4
     mega_batch: int = 100        # batches between merges (paper default 100)
     b_max: int = 256             # max per-replica batch size (slots)

@@ -1,0 +1,25 @@
+"""Pluggable training-algorithm strategies (DESIGN.md §4).
+
+Public API:
+
+* ``Algorithm`` — the strategy base class (hook contract in base.py)
+* ``register(name)`` / ``get(name)`` / ``available()`` — the registry
+* hook result types: ``StateExtras``, ``RoundTransforms``, ``MergeOutcome``
+
+Importing this package registers the built-in algorithm family; external
+code adds members with ``@register("name")`` and they become reachable via
+``ElasticConfig(algorithm="name")`` / ``--algorithm name`` with no trainer
+edits.
+"""
+from .base import (  # noqa: F401
+    Algorithm,
+    MergeOutcome,
+    RoundTransforms,
+    StateExtras,
+    available,
+    get,
+    register,
+)
+
+# built-ins self-register on import
+from . import adaptive, crossbow, delayed_sync, elastic, single, sync  # noqa: F401, E402

@@ -1,0 +1,230 @@
+"""The pluggable Algorithm API (DESIGN.md §4).
+
+An *algorithm* is everything that distinguishes one member of the
+elastic-SGD family from another: how per-replica state is initialized, how
+a mega-batch is partitioned, what happens to gradients/replicas inside a
+lockstep round, how replicas are merged at the barrier, and how batch
+sizes/learning rates adapt between mega-batches. ``ElasticTrainer`` is a
+generic engine that drives whichever ``Algorithm`` the registry resolves
+from ``cfg.algorithm`` — it contains no per-algorithm branching.
+
+Hook contract (all hooks are host-side *except* the members of
+``RoundTransforms``, which are traced inside the engine's jitted round —
+see the jit rules on ``RoundTransforms``):
+
+  * ``init_state_extras(cfg, params, keep_global_copies)`` → ``StateExtras``
+    — initial per-replica batch sizes and the global/prev-global model
+    copies (or None for algorithms that merge directly on the replicas).
+  * ``plan(scheduler, state, mega_samples, fetch_fn)`` → ``MegaBatchPlan``
+    — dynamic (availability-driven) vs static (equal-share) partitioning.
+  * ``round_transforms(cfg)`` → ``RoundTransforms`` — the traced per-round
+    behavior: an optional gradient transform (e.g. cross-replica
+    averaging) and an optional post-update replica correction (e.g.
+    CROSSBOW's pull toward the replica average).
+  * ``merge(trainer, state, plan, replicas)`` → ``MergeOutcome`` — the
+    barrier: produce the new global model and (possibly reset) replicas.
+    ``trainer`` exposes the jitted tensor math (``trainer.merge_models``,
+    ``trainer.replica_norms``) so implementations stay declarative.
+  * ``adapt(state, plan, cfg)`` → ``(new_b, new_lr)`` — between-mega-batch
+    batch-size/learning-rate adaptation (Algorithm 1 for ``adaptive``).
+  * ``merges_per_megabatch(plan)`` — how many merge costs the virtual
+    clock charges (per-round for eager synchronous schemes, 1 for
+    barrier-only or latency-hiding schemes).
+  * ``resolve_n_replicas(requested)`` — clamp the replica count
+    (``single`` forces 1).
+
+Registering a new algorithm requires **no trainer edits**::
+
+    from repro.core.algorithms import Algorithm, register
+
+    @register("my_algo")
+    class MyAlgo(Algorithm):
+        ...
+
+and it is immediately reachable via ``ElasticConfig(algorithm="my_algo")``
+and ``launch/train.py --algorithm my_algo``
+(``tests/test_algorithms.py::test_toy_algorithm_via_public_api`` holds the
+API to exactly this bar).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+PyTree = Any
+
+
+# --------------------------------------------------------------------------
+# hook result types
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StateExtras:
+    """Algorithm-specific slice of the initial ``ElasticState``.
+
+    ``b`` is the (R,) initial per-replica batch size; the trainer derives
+    the initial lr from it via the linear-scaling rule
+    (``base_lr * b / b_max``). ``global_model``/``prev_global`` are the
+    Algorithm-2 bookkeeping copies — None means the algorithm merges
+    directly on the replicas (memory-lean, paper §4).
+    """
+
+    b: np.ndarray
+    global_model: Optional[PyTree] = None
+    prev_global: Optional[PyTree] = None
+
+
+@dataclass(frozen=True)
+class RoundTransforms:
+    """Traced per-round behavior. **Jit rules** (DESIGN.md §4):
+
+    Both engines pass this object to their jitted round functions as a
+    *static* argument (it is hashed by identity of its callables), so the
+    members trace inside the device program — the scan engine's
+    one-sync-per-mega-batch and donation contracts are untouched. That
+    imposes the usual tracing constraints on the callables:
+
+    * pure jnp/tree math only — no host syncs, no Python branching on
+      traced values;
+    * static shapes: transforms see the same (R, ...) leaves every round;
+    * masked rounds must stay exact no-ops. ``grad_transform`` receives
+      the (R,) update mask and must not leak masked replicas' (zero)
+      gradients into live ones; ``post_round`` corrections are gated by
+      the engine itself (skipped when ``mask.max() == 0``, i.e. on
+      bucket-padding rounds) but must keep *masked replicas within a live
+      round* consistent with the algorithm's semantics.
+    * build the object once per trainer (``round_transforms`` is called a
+      single time, from ``_build_jits``) — returning fresh closures per
+      call would defeat the jit cache.
+
+    ``grad_transform(grads, update_mask) -> grads`` runs after the vmapped
+    per-replica gradient computation and before the SGD update; grads may
+    contain RowSparseGrad leaves (densify first if cross-replica math is
+    needed — replicas see different batches, so row-sparse leaves have no
+    common row set). ``post_round(replicas) -> replicas`` runs after the
+    SGD update.
+    """
+
+    grad_transform: Optional[Callable[[PyTree, Any], PyTree]] = None
+    post_round: Optional[Callable[[PyTree], PyTree]] = None
+
+
+@dataclass(frozen=True)
+class MergeOutcome:
+    """What the barrier produced.
+
+    ``replicas`` — the (R, ...) tree training continues from (merged
+    algorithms broadcast the new global; others return the input).
+    ``global_model`` — the model evaluation/checkpointing uses.
+    ``alphas``/``pert_active`` — Algorithm-2 diagnostics for the metrics
+    log (uniform / False where not applicable).
+    """
+
+    replicas: PyTree
+    global_model: PyTree
+    prev_global: Optional[PyTree] = None
+    alphas: Optional[np.ndarray] = None
+    pert_active: bool = False
+
+
+# --------------------------------------------------------------------------
+# the strategy protocol
+# --------------------------------------------------------------------------
+
+
+class Algorithm:
+    """Base strategy: K-step model averaging over a static equal plan.
+
+    Subclasses override only the hooks whose behavior differs; the
+    defaults implement the common elastic-averaging scaffolding (static
+    plan, no round transforms, plain-average merge on the replicas, no
+    adaptation, one merge per mega-batch).
+    """
+
+    #: registry key, set by @register
+    name: str = "?"
+
+    # ---- state ----
+    def init_state_extras(self, cfg, params, keep_global_copies: bool) -> StateExtras:
+        # paper: initialize at b_max (Fig. 10a)
+        return StateExtras(b=np.full(cfg.n_replicas, float(cfg.b_max)))
+
+    # ---- planning ----
+    def plan(self, scheduler, state, mega_samples: int, fetch_fn):
+        """Default: static equal partitioning (the slowest replica
+        dictates the barrier, paper Fig. 3)."""
+        R = scheduler.cfg.n_replicas
+        per_rep = max(1, int(round(mega_samples / (R * state.b[0]))))
+        return scheduler.plan_static(int(state.b[0]), per_rep, fetch_fn=fetch_fn)
+
+    def _plan_dynamic(self, scheduler, state, mega_samples: int, fetch_fn):
+        """Availability-driven dispatch over the virtual clock (paper §3.1)."""
+        return scheduler.plan_megabatch(
+            np.round(state.b).astype(np.int64), mega_samples, fetch_fn=fetch_fn
+        )
+
+    # ---- traced round behavior ----
+    def round_transforms(self, cfg) -> RoundTransforms:
+        return RoundTransforms()
+
+    # ---- barrier ----
+    def merge(self, trainer, state, plan, replicas) -> MergeOutcome:
+        """Plain average of the replicas (no global-model momentum)."""
+        R = trainer.cfg.n_replicas
+        alphas = np.full(R, 1.0 / R)
+        new_global, new_replicas = trainer.merge_models(
+            replicas, alphas, None, None, 0.0
+        )
+        return MergeOutcome(
+            replicas=new_replicas, global_model=new_global, alphas=alphas
+        )
+
+    # ---- between-mega-batch adaptation ----
+    def adapt(self, state, plan, cfg):
+        return state.b, state.lr
+
+    # ---- accounting ----
+    def merges_per_megabatch(self, plan) -> int:
+        return 1
+
+    def resolve_n_replicas(self, requested: int) -> int:
+        return requested
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type[Algorithm]] = {}
+
+
+def register(name: str):
+    """Class decorator: ``@register("my_algo")`` on an Algorithm subclass."""
+
+    def deco(cls):
+        if not (isinstance(cls, type) and issubclass(cls, Algorithm)):
+            raise TypeError(f"{cls!r} must subclass Algorithm")
+        if name in _REGISTRY and _REGISTRY[name] is not cls:
+            raise ValueError(f"algorithm {name!r} already registered")
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get(name: str) -> Algorithm:
+    """Resolve a registered algorithm to a fresh strategy instance."""
+    try:
+        return _REGISTRY[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown algorithm {name!r}; registered: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))

@@ -1,0 +1,56 @@
+"""CROSSBOW synchronous model averaging (paper §5.1 baseline).
+
+Independent learners corrected toward the replica average after every
+round. The correction is a single function — ``crossbow_correct`` — used
+both as the traced post-round hook (both engines run it inside the jitted
+round body) and, jitted standalone, to read the center as the global model
+at the mega-batch barrier.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils import tree as tu
+
+from .base import Algorithm, MergeOutcome, RoundTransforms, register
+
+
+def crossbow_correct(replicas, c: float):
+    """w_i ← w_i − c (w_i − w̄). Returns (corrected replicas, center w̄)."""
+    center = tu.tree_map(
+        lambda l: jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True),
+        replicas,
+    )
+    corrected = tu.tree_map(
+        lambda l, m: (
+            l.astype(jnp.float32) - c * (l.astype(jnp.float32) - m)
+        ).astype(l.dtype),
+        replicas,
+        center,
+    )
+    return corrected, tu.tree_map(lambda m: m[0].astype(jnp.float32), center)
+
+
+_correct_jit = jax.jit(crossbow_correct, static_argnames=("c",))
+
+
+@register("crossbow")
+class Crossbow(Algorithm):
+    def round_transforms(self, cfg):
+        c = cfg.crossbow_correction
+        return RoundTransforms(post_round=lambda reps: crossbow_correct(reps, c)[0])
+
+    def merge(self, trainer, state, plan, replicas):
+        cfg = trainer.cfg
+        replicas, center = _correct_jit(replicas, cfg.crossbow_correction)
+        return MergeOutcome(
+            replicas=replicas,
+            global_model=center,
+            alphas=np.full(cfg.n_replicas, 1.0 / cfg.n_replicas),
+        )
+
+    def merges_per_megabatch(self, plan):
+        # synchronous averaging after every batch, like `sync`
+        return plan.n_rounds

@@ -1,0 +1,81 @@
+"""Delayed-synchronous SGD with adaptive batch sizes (ABS-SGD-style).
+
+A sixth algorithm, registered purely through the public Algorithm API —
+no trainer edits — in the spirit of ABS-SGD (Zhou et al., 2023, PAPERS.md):
+heterogeneous workers process batches sized to their speed, gradients are
+globally aggregated each step, and the aggregation latency is hidden
+behind the next step's computation (one-step delayed synchronization).
+
+Mapping onto the reproduction's masked-lockstep engine:
+
+* **Adaptive batch sizes** — the mega-batch is planned with the paper's
+  availability-driven dynamic dispatch (fast replicas get more rounds),
+  and between mega-batches per-replica batch sizes follow the same
+  deviation-from-mean-update-count scaling as Adaptive SGD (Algorithm 1)
+  with the linear lr-scaling rule — the reproduction-scale analogue of
+  ABS-SGD's proportional batch allocation.
+* **Synchronous aggregation** — each lockstep round averages gradients
+  across the *live* replicas of that round (mask-weighted mean: dynamic
+  plans mask replicas whose clock passed the horizon, and their zero
+  gradients must not dilute the mean — contrast `sync`, whose static plans
+  keep every replica live).
+* **Delay** — ABS-SGD's one-step-delayed aggregation exists to hide
+  communication latency, not to change the update math beyond staleness.
+  On the virtual clock we model exactly that effect: the per-round
+  all-reduce overlaps compute, so the mega-batch is charged a single
+  barrier merge cost instead of `sync`'s one per round.
+* **Barrier** — live replicas apply identical mean gradients but at
+  per-replica learning rates and update counts, so they drift; the
+  barrier takes the update-count-weighted average (Algorithm 2's
+  normalization without the global-momentum term).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import adaptive_sgd as asgd
+from repro.optim.row_sparse import densify_tree
+from repro.utils import tree as tu
+
+from .base import Algorithm, MergeOutcome, RoundTransforms, register
+
+
+def masked_mean_grads(grads, update_mask):
+    """Mean over live replicas, broadcast to all (masked rows get it too,
+    but their SGD update is masked off, so they stay frozen)."""
+    grads = densify_tree(grads)
+    w = update_mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+
+    def one(g):
+        wg = w.reshape((-1,) + (1,) * (g.ndim - 1)) * g.astype(jnp.float32)
+        mean = jnp.sum(wg, axis=0, keepdims=True) / denom
+        return jnp.broadcast_to(mean, g.shape).astype(g.dtype)
+
+    return tu.tree_map(one, grads)
+
+
+@register("delayed_sync")
+class DelayedSyncAdaptiveBatch(Algorithm):
+    # state init: the base default (b = b_max everywhere, no global copies)
+
+    def plan(self, scheduler, state, mega_samples, fetch_fn):
+        return self._plan_dynamic(scheduler, state, mega_samples, fetch_fn)
+
+    def round_transforms(self, cfg):
+        return RoundTransforms(grad_transform=masked_mean_grads)
+
+    def merge(self, trainer, state, plan, replicas):
+        alphas = asgd.merge_weights(plan.u, state.b)
+        new_global, new_replicas = trainer.merge_models(
+            replicas, alphas, None, None, 0.0
+        )
+        return MergeOutcome(
+            replicas=new_replicas, global_model=new_global, alphas=alphas
+        )
+
+    def adapt(self, state, plan, cfg):
+        return asgd.batch_size_scaling(state.b, state.lr, plan.u, cfg)
+
+    def merges_per_megabatch(self, plan):
+        return 1  # aggregation latency is hidden behind compute (the delay)

@@ -9,9 +9,15 @@ over the replica mesh axis via the rules in sharding/rules.py. On CPU (CI /
 smoke) it runs the reduced config on one device — identical code path,
 identical algorithm semantics; only the mesh differs.
 
+``--algorithm`` accepts anything in the core/algorithms registry — the
+paper's Adaptive SGD, the baselines, and any plugin registered through the
+public Algorithm API (e.g. the ABS-SGD-style ``delayed_sync``).
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --workload xml \
       --algorithm adaptive --replicas 4 --megabatches 20
+  PYTHONPATH=src python -m repro.launch.train --workload xml \
+      --algorithm delayed_sync --replicas 4 --megabatches 20
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --algorithm adaptive --megabatches 5
 """
@@ -25,6 +31,7 @@ import numpy as np
 
 from repro.configs.archs import ARCHS
 from repro.configs.base import ElasticConfig
+from repro.core import algorithms
 from repro.core.heterogeneity import SpeedModel
 from repro.core.trainer import ENGINES, ElasticTrainer
 from repro.data.providers import SparseProvider, TokenProvider
@@ -71,7 +78,10 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="reduced config (CPU smoke)")
     ap.add_argument("--algorithm", default="adaptive",
-                    choices=["adaptive", "elastic", "sync", "crossbow", "single"])
+                    choices=list(algorithms.available()),
+                    help="any algorithm in the core/algorithms registry"
+                         " (plugins registered via @algorithms.register"
+                         " appear here automatically)")
     ap.add_argument("--engine", default="scan", choices=list(ENGINES),
                     help="mega-batch executor: device-resident scan (default)"
                          " or the per-round host loop")
@@ -105,7 +115,7 @@ def main(argv=None):
     ecfg = ElasticConfig.from_bmax(
         args.b_max,
         algorithm=args.algorithm,
-        n_replicas=1 if args.algorithm == "single" else args.replicas,
+        n_replicas=algorithms.get(args.algorithm).resolve_n_replicas(args.replicas),
         mega_batch=args.mega_batch,
     )
     speed = SpeedModel(ecfg.n_replicas, max_gap=args.hetero, seed=args.seed)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.models.protocol import TrainableModel
 from repro.sharding.annotate import shard
 from . import layers as L
 from . import mamba2 as M
@@ -537,9 +538,9 @@ def prefill(cfg: ModelConfig, params: dict, batch: dict):
 # --------------------------------------------------------------------------
 
 
-def make_model(cfg: ModelConfig):
-    return {
-        "init": lambda rng: init(cfg, rng),
-        "loss_fn": lambda params, batch: loss_fn(cfg, params, batch),
-        "config": cfg,
-    }
+def make_model(cfg: ModelConfig) -> TrainableModel:
+    return TrainableModel(
+        init=lambda rng: init(cfg, rng),
+        loss_fn=lambda params, batch: loss_fn(cfg, params, batch),
+        config=cfg,
+    )

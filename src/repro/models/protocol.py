@@ -1,0 +1,67 @@
+"""The typed model protocol consumed by the training engine.
+
+A *trainable model* is the trainer-facing bundle every workload exports
+(``models/xml_mlp.py``, ``models/model.py``): pure functions, no trainer
+coupling. ``ElasticTrainer`` accepts a ``TrainableModel`` (or, for
+backward compatibility, the legacy ``{'init': ..., 'loss_fn': ...}`` dict,
+coerced via ``as_trainable_model``).
+
+Contract:
+
+* ``init(rng) -> params`` — build a parameter pytree.
+* ``loss_fn(params, batch) -> (loss, aux)`` — aux must contain
+  ``accuracy`` and ``n_valid``; differentiable (the dense-autodiff path
+  runs ``jax.value_and_grad`` over it).
+* ``sparse_grad_fn(params, batch) -> ((loss, aux), grads)`` — optional
+  fused loss+gradient with the ``value_and_grad`` calling convention;
+  grad leaves may be ``RowSparseGrad`` (DESIGN.md §3). None = the model
+  has no sparse path and the trainer always uses dense autodiff.
+* ``config`` — the model's own config object (opaque to the trainer).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+PyTree = Any
+
+
+@dataclass(frozen=True)
+class TrainableModel:
+    init: Callable[[Any], PyTree]
+    loss_fn: Callable[[PyTree, dict], tuple]
+    sparse_grad_fn: Optional[Callable[[PyTree, dict], tuple]] = None
+    config: Any = None
+
+    # ---- legacy dict-style access (pre-protocol call sites) ----
+    def __getitem__(self, key):
+        val = getattr(self, key, None) if isinstance(key, str) else None
+        if val is None:
+            raise KeyError(key)
+        return val
+
+    def __contains__(self, key) -> bool:
+        return (
+            isinstance(key, str)
+            and getattr(self, key, None) is not None
+        )
+
+    def get(self, key: str, default=None):
+        val = getattr(self, key, None)
+        return default if val is None else val
+
+
+def as_trainable_model(model) -> TrainableModel:
+    """Coerce the legacy model dict (or pass through a TrainableModel)."""
+    if isinstance(model, TrainableModel):
+        return model
+    if isinstance(model, dict):
+        return TrainableModel(
+            init=model["init"],
+            loss_fn=model["loss_fn"],
+            sparse_grad_fn=model.get("sparse_grad_fn"),
+            config=model.get("config"),
+        )
+    raise TypeError(
+        f"expected TrainableModel or legacy model dict, got {type(model).__name__}"
+    )

@@ -26,6 +26,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models.protocol import TrainableModel
 from repro.optim.row_sparse import RowSparseGrad
 
 
@@ -154,15 +155,14 @@ def loss_and_sparse_grad(cfg: XMLMLPConfig, params: dict, batch: dict):
     return (loss, aux), grads
 
 
-def make_model(cfg: XMLMLPConfig):
-    """Bundle (init, loss[, sparse_grad]) in the trainer's model protocol."""
-    model = {
-        "init": lambda rng: init_params(cfg, rng),
-        "loss_fn": lambda params, batch: loss_fn(cfg, params, batch),
-        "config": cfg,
-    }
-    if cfg.sparse_grads:
-        model["sparse_grad_fn"] = (
-            lambda params, batch: loss_and_sparse_grad(cfg, params, batch)
-        )
-    return model
+def make_model(cfg: XMLMLPConfig) -> TrainableModel:
+    """Bundle (init, loss[, sparse_grad]) as the trainer's TrainableModel."""
+    return TrainableModel(
+        init=lambda rng: init_params(cfg, rng),
+        loss_fn=lambda params, batch: loss_fn(cfg, params, batch),
+        sparse_grad_fn=(
+            (lambda params, batch: loss_and_sparse_grad(cfg, params, batch))
+            if cfg.sparse_grads else None
+        ),
+        config=cfg,
+    )
