@@ -18,7 +18,7 @@ from repro.core import algorithms
 from repro.core.heterogeneity import SpeedModel
 from repro.core.trainer import ElasticTrainer
 from repro.data.providers import SparseProvider
-from repro.data.sparse import SparseDataset, train_test_split
+from repro.data.sparse import train_test_split
 from repro.data.xml_synth import make_xml_dataset
 from repro.models.xml_mlp import XMLMLPConfig, make_model
 from repro.utils.logging import MetricsLog

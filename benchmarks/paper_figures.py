@@ -14,7 +14,7 @@ from __future__ import annotations
 import numpy as np
 
 from .common import (
-    AMAZON, B_MAX, DELICIOUS, MEGA_BATCH, N_MEGABATCHES, WORKLOADS,
+    AMAZON, B_MAX, MEGA_BATCH, N_MEGABATCHES, WORKLOADS,
     build_trainer, fmt, run_for_budget, run_one, summarize,
 )
 

@@ -102,7 +102,8 @@ def bench_step(nf: int, repeats: int) -> list[dict]:
     dense_grad = jax.value_and_grad(
         lambda p: loss_fn(cfg, p, batch), has_aux=True
     )
-    sparse_grad = lambda p: loss_and_sparse_grad(cfg, p, batch)
+    def sparse_grad(p):
+        return loss_and_sparse_grad(cfg, p, batch)
 
     def scanned(grad_fn, with_update):
         def body(p, _):
@@ -126,8 +127,7 @@ def bench_step(nf: int, repeats: int) -> list[dict]:
     for mode, with_update in (("fwd_bwd", False), ("fwd_bwd_update", True)):
         for path, grad_fn in (("dense", dense_grad), ("sparse", sparse_grad)):
             run = scanned(grad_fn, with_update)
-            fn = lambda: jax.block_until_ready(run(params))
-            dt = _time(fn, repeats)
+            dt = _time(lambda: jax.block_until_ready(run(params)), repeats)
             steps = repeats * ROUNDS
             rows.append({
                 "mode": mode, "path": path, "nf": nf, "steps": steps,

@@ -1,0 +1,155 @@
+"""Benchmark regression gate (CI bench job).
+
+Compares freshly produced ``BENCH_*.json`` headline metrics against the
+committed baselines and fails on a regression larger than the tolerance —
+bench artifacts have been uploaded since PR 1, but nothing ever *read*
+them, so a change could silently halve a speedup and still merge green.
+
+Headline metrics per benchmark (higher is better unless noted):
+
+* ``BENCH_engine.json``      — every entry of ``speedup_steps_per_s``
+  (scan-vs-legacy engine and end-to-end speedups per replica count)
+* ``BENCH_spmm_grad.json``   — every entry of ``speedup_sparse_over_dense``
+* ``BENCH_algorithms.json``  — per-algorithm ``tta`` (time-to-accuracy,
+  LOWER is better; a fresh run that no longer reaches the target where the
+  baseline did is an automatic failure) and ``best_acc``
+
+Baselines default to ``git show HEAD:<file>`` so the gate needs no extra
+artifact plumbing: the bench job regenerates the jsons in the workspace and
+this script diffs them against the committed versions. ``--baseline-dir``
+points at saved copies instead (e.g. when comparing two fresh runs).
+
+Exit code 0 = within tolerance, 1 = regression, 2 = usage/data error.
+
+    python scripts/bench_check.py                  # all benchmarks, 25%
+    python scripts/bench_check.py --tolerance 0.1 BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+DEFAULT_TOLERANCE = 0.25
+BENCH_FILES = ("BENCH_engine.json", "BENCH_spmm_grad.json",
+               "BENCH_algorithms.json")
+
+
+def headline_metrics(name: str, data: dict) -> dict[str, tuple[float | None, bool]]:
+    """{metric: (value, higher_is_better)} for one benchmark file."""
+    out: dict[str, tuple[float | None, bool]] = {}
+    if name == "BENCH_engine.json":
+        for k, v in data.get("speedup_steps_per_s", {}).items():
+            out[f"speedup_steps_per_s/{k}"] = (float(v), True)
+    elif name == "BENCH_spmm_grad.json":
+        for k, v in data.get("speedup_sparse_over_dense", {}).items():
+            out[f"speedup_sparse_over_dense/{k}"] = (float(v), True)
+    elif name == "BENCH_algorithms.json":
+        for row in data.get("rows", []):
+            algo = row["algorithm"]
+            tta = row.get("tta")
+            out[f"tta/{algo}"] = (None if tta is None else float(tta), False)
+            out[f"best_acc/{algo}"] = (float(row["best_acc"]), True)
+    else:
+        raise KeyError(f"no headline extraction defined for {name}")
+    return out
+
+
+def load_baseline(name: str, baseline_dir: str | None, repo_root: str) -> dict:
+    if baseline_dir:
+        with open(os.path.join(baseline_dir, name)) as f:
+            return json.load(f)
+    blob = subprocess.run(
+        ["git", "show", f"HEAD:{name}"], capture_output=True, text=True,
+        cwd=repo_root, check=True,
+    ).stdout
+    return json.loads(blob)
+
+
+def check_file(name: str, fresh: dict, base: dict, tolerance: float) -> list[str]:
+    """Returns a list of human-readable regression messages (empty = pass)."""
+    fresh_m = headline_metrics(name, fresh)
+    base_m = headline_metrics(name, base)
+    if not base_m:
+        # a renamed/absent headline key must not disable the gate silently
+        return [f"{name}: baseline contains no headline metrics — "
+                "benchmark output schema changed? update headline_metrics()"]
+    failures = []
+    for key, (b_val, higher_better) in sorted(base_m.items()):
+        if key not in fresh_m:
+            failures.append(f"{name}:{key} missing from the fresh run")
+            continue
+        f_val, _ = fresh_m[key]
+        if b_val is None:
+            continue                    # baseline never reached the target
+        if f_val is None:
+            failures.append(
+                f"{name}:{key} baseline={b_val:.4g} but the fresh run never "
+                "reached the target"
+            )
+            continue
+        if higher_better:
+            floor = b_val * (1.0 - tolerance)
+            if f_val < floor:
+                failures.append(
+                    f"{name}:{key} regressed: {f_val:.4g} < {floor:.4g} "
+                    f"(baseline {b_val:.4g}, tolerance {tolerance:.0%})"
+                )
+        else:
+            ceil = b_val * (1.0 + tolerance)
+            if f_val > ceil:
+                failures.append(
+                    f"{name}:{key} regressed: {f_val:.4g} > {ceil:.4g} "
+                    f"(baseline {b_val:.4g}, tolerance {tolerance:.0%})"
+                )
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="*", default=[],
+                    help=f"benchmark jsons to gate (default: {BENCH_FILES})")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed relative regression (default 0.25 = 25%%)")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="directory with baseline jsons (default: read the "
+                         "committed versions via `git show HEAD:<file>`)")
+    args = ap.parse_args(argv)
+
+    repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = args.files or [os.path.join(repo_root, f) for f in BENCH_FILES]
+
+    failures: list[str] = []
+    for path in files:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                fresh = json.load(f)
+            base = load_baseline(name, args.baseline_dir, repo_root)
+        except (OSError, subprocess.CalledProcessError, json.JSONDecodeError) as e:
+            print(f"bench_check: cannot load {name}: {e}", file=sys.stderr)
+            return 2
+        try:
+            msgs = check_file(name, fresh, base, args.tolerance)
+        except KeyError as e:
+            print(f"bench_check: {e.args[0]}", file=sys.stderr)
+            return 2
+        status = "FAIL" if msgs else "ok"
+        n = len(headline_metrics(name, base))
+        print(f"[bench_check] {name}: {n} headline metrics — {status}")
+        failures.extend(msgs)
+
+    for msg in failures:
+        print(f"[bench_check] REGRESSION {msg}", file=sys.stderr)
+    if failures:
+        print(f"[bench_check] {len(failures)} regression(s) beyond "
+              f"{args.tolerance:.0%}", file=sys.stderr)
+        return 1
+    print("[bench_check] all headline metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,7 +12,7 @@ combinations used by the dry-run and roofline harness.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 # --------------------------------------------------------------------------
@@ -151,6 +151,14 @@ class ElasticConfig:
     algorithm: str = "adaptive"  # any key in the core/algorithms registry
                                  # (built-ins: adaptive | elastic | sync |
                                  #  crossbow | single | delayed_sync)
+    placement: str = "vmap"      # replica execution placement (DESIGN.md §5):
+                                 #   'vmap'    — all replicas on one device,
+                                 #               vectorized over the leading R
+                                 #               dim (the differential oracle)
+                                 #   'sharded' — R laid out over a 1-D
+                                 #               'replica' device mesh via
+                                 #               shard_map; merges/metrics are
+                                 #               cross-device collectives
     n_replicas: int = 4
     mega_batch: int = 100        # batches between merges (paper default 100)
     b_max: int = 256             # max per-replica batch size (slots)

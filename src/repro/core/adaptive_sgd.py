@@ -104,6 +104,7 @@ def normalized_merge(
     prev_global: Optional[PyTree],
     gamma: float,
     use_kernel: Optional[bool] = None,
+    axis_name: Optional[str] = None,
 ) -> PyTree:
     """Lines 11-12: w' = sum_i alpha_i w_i + gamma (w̄ - w̄_p).
 
@@ -118,18 +119,32 @@ def normalized_merge(
     scale+add and the momentum term read every replica shard once from HBM.
     None = auto: kernel on accelerator backends, jnp on CPU (the fallback
     and differential oracle).
+
+    ``axis_name`` — set when tracing inside the sharded replica executor
+    (DESIGN.md §5): the local weighted sum over this shard's replicas
+    (kernel or jnp — ``alphas`` is the local slice) is a *partial* of
+    Algorithm 2's reduction, completed with a psum over the replica mesh
+    axis before the momentum term; every shard then holds the replicated
+    new global. This is exactly the paper §4 all-reduce merge.
     """
     alphas = jnp.asarray(alphas, jnp.float32)
     if use_kernel is None:
         use_kernel = jax.default_backend() in ("tpu", "gpu")
+    momentum = not (global_model is None or prev_global is None or gamma == 0.0)
     if use_kernel:
         from repro.kernels.weighted_merge.ops import merge_pytree
 
-        if global_model is None or prev_global is None or gamma == 0.0:
-            return merge_pytree(replicas, alphas)
-        return merge_pytree(replicas, alphas, global_model, prev_global, gamma)
-    merged = tu.tree_weighted_sum_replicas(replicas, alphas)
-    if global_model is None or prev_global is None or gamma == 0.0:
+        if momentum and axis_name is None:
+            # single-program path: weighted sum + momentum fused in-kernel
+            return merge_pytree(replicas, alphas, global_model, prev_global, gamma)
+        merged = merge_pytree(replicas, alphas)
+    else:
+        merged = tu.tree_weighted_sum_replicas(replicas, alphas)
+    if axis_name is not None:
+        # per-shard partials -> the collective merge (momentum term must see
+        # the complete weighted sum, so the psum sits between the two)
+        merged = tu.tree_map(lambda l: jax.lax.psum(l, axis_name), merged)
+    if not momentum:
         return merged
     return tu.tree_map(
         lambda m, g, gp: (

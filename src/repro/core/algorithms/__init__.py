@@ -19,6 +19,7 @@ from .base import (  # noqa: F401
     available,
     get,
     register,
+    replica_axis_name,
 )
 
 # built-ins self-register on import

@@ -55,6 +55,26 @@ import numpy as np
 
 PyTree = Any
 
+#: mesh-axis name bound inside the trainer's sharded executors — re-exported
+#: here so strategy code never imports the sharding layer directly.
+from repro.sharding.rules import REPLICA_AXIS  # noqa: E402
+
+
+def replica_axis_name(cfg) -> Optional[str]:
+    """The collective axis a traced hook must reduce over, or None.
+
+    Under ``cfg.placement == 'sharded'`` the engine traces RoundTransforms
+    inside a shard_map over the 1-D replica mesh, so the leading R dim of
+    the leaves a transform sees only covers *this shard's* replicas:
+    cross-replica math (gradient averaging, CROSSBOW's center) must fold in
+    the other shards via collectives over this axis name
+    (``tu.replica_all_sum`` / ``tu.tree_replica_mean_keepdims`` take it as
+    an argument). Under the default vmap placement every replica is local
+    and this returns None — the helpers then reduce exactly as before, so
+    the golden-checked numerics are untouched.
+    """
+    return REPLICA_AXIS if getattr(cfg, "placement", "vmap") == "sharded" else None
+
 
 # --------------------------------------------------------------------------
 # hook result types
@@ -89,7 +109,13 @@ class RoundTransforms:
 
     * pure jnp/tree math only — no host syncs, no Python branching on
       traced values;
-    * static shapes: transforms see the same (R, ...) leaves every round;
+    * static shapes: transforms see the same (R, ...) leaves every round —
+      where R is the number of replicas *local to the executing program*:
+      all of them under the vmap placement, this shard's slice under
+      ``placement='sharded'``. Cross-replica reductions must therefore go
+      through the placement-aware helpers (``replica_axis_name(cfg)`` +
+      ``tu.replica_all_sum``/``tu.tree_replica_mean_keepdims``), never a
+      bare ``jnp.mean(axis=0)``;
     * masked rounds must stay exact no-ops. ``grad_transform`` receives
       the (R,) update mask and must not leak masked replicas' (zero)
       gradients into live ones; ``post_round`` corrections are gated by

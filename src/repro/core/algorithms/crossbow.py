@@ -14,15 +14,16 @@ import numpy as np
 
 from repro.utils import tree as tu
 
-from .base import Algorithm, MergeOutcome, RoundTransforms, register
+from .base import Algorithm, MergeOutcome, RoundTransforms, register, replica_axis_name
 
 
-def crossbow_correct(replicas, c: float):
-    """w_i ← w_i − c (w_i − w̄). Returns (corrected replicas, center w̄)."""
-    center = tu.tree_map(
-        lambda l: jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True),
-        replicas,
-    )
+def crossbow_correct(replicas, c: float, axis_name=None):
+    """w_i ← w_i − c (w_i − w̄). Returns (corrected replicas, center w̄).
+
+    The center w̄ averages the *global* replica population; ``axis_name``
+    extends the mean across shards when tracing inside the sharded
+    executor (base.py jit rules)."""
+    center = tu.tree_replica_mean_keepdims(replicas, axis_name)
     corrected = tu.tree_map(
         lambda l, m: (
             l.astype(jnp.float32) - c * (l.astype(jnp.float32) - m)
@@ -40,7 +41,10 @@ _correct_jit = jax.jit(crossbow_correct, static_argnames=("c",))
 class Crossbow(Algorithm):
     def round_transforms(self, cfg):
         c = cfg.crossbow_correction
-        return RoundTransforms(post_round=lambda reps: crossbow_correct(reps, c)[0])
+        axis = replica_axis_name(cfg)
+        return RoundTransforms(
+            post_round=lambda reps: crossbow_correct(reps, c, axis)[0]
+        )
 
     def merge(self, trainer, state, plan, replicas):
         cfg = trainer.cfg

@@ -37,19 +37,22 @@ from repro.core import adaptive_sgd as asgd
 from repro.optim.row_sparse import densify_tree
 from repro.utils import tree as tu
 
-from .base import Algorithm, MergeOutcome, RoundTransforms, register
+from .base import Algorithm, MergeOutcome, RoundTransforms, register, replica_axis_name
 
 
-def masked_mean_grads(grads, update_mask):
+def masked_mean_grads(grads, update_mask, axis_name=None):
     """Mean over live replicas, broadcast to all (masked rows get it too,
-    but their SGD update is masked off, so they stay frozen)."""
+    but their SGD update is masked off, so they stay frozen). Live replicas
+    are counted across the whole mesh: with ``axis_name`` set, the weighted
+    sum and the live count are psum-ed over the replica axis before the
+    divide (base.py jit rules)."""
     grads = densify_tree(grads)
     w = update_mask.astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(w), 1.0)
+    denom = jnp.maximum(tu.replica_all_sum(jnp.sum(w), axis_name), 1.0)
 
     def one(g):
         wg = w.reshape((-1,) + (1,) * (g.ndim - 1)) * g.astype(jnp.float32)
-        mean = jnp.sum(wg, axis=0, keepdims=True) / denom
+        mean = tu.replica_all_sum(jnp.sum(wg, axis=0, keepdims=True), axis_name) / denom
         return jnp.broadcast_to(mean, g.shape).astype(g.dtype)
 
     return tu.tree_map(one, grads)
@@ -63,7 +66,10 @@ class DelayedSyncAdaptiveBatch(Algorithm):
         return self._plan_dynamic(scheduler, state, mega_samples, fetch_fn)
 
     def round_transforms(self, cfg):
-        return RoundTransforms(grad_transform=masked_mean_grads)
+        axis = replica_axis_name(cfg)  # None under vmap: helpers reduce as-is
+        return RoundTransforms(
+            grad_transform=lambda g, mask: masked_mean_grads(g, mask, axis)
+        )
 
     def merge(self, trainer, state, plan, replicas):
         alphas = asgd.merge_weights(plan.u, state.b)

@@ -13,20 +13,29 @@ import numpy as np
 from repro.optim.row_sparse import densify_tree
 from repro.utils import tree as tu
 
-from .base import Algorithm, MergeOutcome, RoundTransforms, StateExtras, register
+from .base import (
+    Algorithm,
+    MergeOutcome,
+    RoundTransforms,
+    StateExtras,
+    register,
+    replica_axis_name,
+)
 
 
-def mean_grads(grads, update_mask):
+def mean_grads(grads, update_mask, axis_name=None):
     """All replicas share the plain cross-replica mean gradient.
 
     Replicas see different batches, so row-sparse grads have no common row
     set to average over — densify before the mean. (Static plans: every
-    replica is live each round, so the mask does not enter.)
+    replica is live each round, so the mask does not enter.) The mean spans
+    the *global* replica population: under the sharded placement
+    ``axis_name`` folds the other shards in (base.py jit rules).
     """
     grads = densify_tree(grads)
+    means = tu.tree_replica_mean_keepdims(grads, axis_name)
     return tu.tree_map(
-        lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
-        grads,
+        lambda g, m: jnp.broadcast_to(m, g.shape).astype(g.dtype), grads, means
     )
 
 
@@ -37,7 +46,10 @@ class GradientAggregation(Algorithm):
         return StateExtras(b=np.full(cfg.n_replicas, float(b0)))
 
     def round_transforms(self, cfg):
-        return RoundTransforms(grad_transform=mean_grads)
+        axis = replica_axis_name(cfg)  # None under vmap: helpers reduce as-is
+        return RoundTransforms(
+            grad_transform=lambda g, mask: mean_grads(g, mask, axis)
+        )
 
     def merge(self, trainer, state, plan, replicas):
         R = trainer.cfg.n_replicas

@@ -16,7 +16,9 @@ algorithm only ever sees *relative speeds*, exactly as in the paper.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
+from typing import Callable
 
 import numpy as np
 
@@ -62,16 +64,146 @@ class SpeedModel:
 
 
 @dataclass
+class MeasuredSpeedModel:
+    """Relative replica speeds estimated from *measured* round times.
+
+    The simulated ``SpeedModel`` invents heterogeneity; this model closes
+    the paper's feedback loop (§3.1) instead: the trainer reports how long
+    each replica's share of a mega-batch actually took
+    (``observe(replica, work_units, seconds)``), the model keeps an
+    exponential moving average of seconds-per-work-unit per replica, and
+    ``step_factor`` exposes the *relative* speeds (slowest/fastest ratios,
+    fastest normalized to 1.0) — the only thing the scheduler's virtual
+    clock ever consumes, exactly as in the paper.
+
+    Measurement sources (DESIGN.md §5):
+      * sharded placement — post-round timing of the mega-batch program,
+        attributed per replica by its scheduled share of the window
+        (``observe_plan``); on a heterogeneous fleet, per-shard host
+        callbacks can feed ``observe`` directly instead;
+      * tests — ``timer`` is injectable, so a fake clock drives the model
+        deterministically (no sleeping in unit tests).
+
+    Until a replica has ``min_obs`` observations its factor stays at the
+    prior (1.0 = homogeneous), so cold-start planning is unbiased, and the
+    first ``warmup_windows`` mega-batch windows are discarded entirely —
+    they are dominated by jit compilation, which would otherwise charge
+    compile time only to the replicas that happened to be live. The
+    interface is duck-compatible with ``SpeedModel`` (``step_factor`` /
+    ``advance`` / ``factors``): ``CostModel`` cannot tell them apart.
+    """
+
+    n_replicas: int
+    ema: float = 0.5             # weight of the newest observation
+    min_obs: int = 1             # observations before the prior is replaced
+    warmup_windows: int = 1      # leading observe_plan windows to discard
+    timer: Callable[[], float] = time.perf_counter  # injectable for tests
+    t_per_work: np.ndarray = field(init=False)      # EMA seconds/work-unit
+    n_obs: np.ndarray = field(init=False)
+    n_windows: int = field(init=False, default=0)
+    _factors: np.ndarray = field(init=False, default=None)  # cache; see factors
+
+    def __post_init__(self):
+        self.t_per_work = np.full(self.n_replicas, np.nan)
+        self.n_obs = np.zeros(self.n_replicas, np.int64)
+
+    # ---- measurement ingestion ----
+    def begin(self) -> float:
+        """Start a measurement window (returns a timer handle)."""
+        return self.timer()
+
+    def elapsed(self, handle: float) -> float:
+        return self.timer() - handle
+
+    def observe(self, replica: int, work_units: float, seconds: float) -> None:
+        """One measured (replica, work, wall-seconds) sample."""
+        if work_units <= 0 or seconds <= 0:
+            return
+        tpw = seconds / float(work_units)
+        if self.n_obs[replica] == 0:
+            self.t_per_work[replica] = tpw
+        else:
+            self.t_per_work[replica] = (
+                self.ema * tpw + (1.0 - self.ema) * self.t_per_work[replica]
+            )
+        self.n_obs[replica] += 1
+        self._factors = None  # invalidate the cached relative factors
+
+    def observe_plan(self, per_replica_work: np.ndarray, seconds: float,
+                     u: np.ndarray | None = None, n_rounds: int = 0) -> None:
+        """Attribute one mega-batch's wall time across its replicas.
+
+        With the plan's update counts ``u`` (and its round count), each
+        replica is charged only its *scheduled share* of the window,
+        ``seconds * u_i / n_rounds`` — a replica live in every round owns
+        the whole window, one masked out of half the rounds owns half. This
+        matters: charging everyone the full window would measure planner
+        asymmetry (who got the leftover dispatch) as a speed difference and
+        feed it back into the next plan, a self-amplifying loop with no
+        hardware cause. With the share normalization, equal per-round
+        throughput measures equal speed regardless of how many rounds the
+        planner handed out. Without ``u`` the whole window is charged
+        (e.g. single-dispatch callers).
+
+        The residual limit is physical, not statistical: lockstep rounds
+        end at a global barrier, so a genuinely slow device stretches every
+        live round for everyone and the coarse fallback converges toward
+        homogeneous factors. True per-replica contrast needs per-shard
+        timing callbacks feeding ``observe`` directly (ROADMAP).
+        """
+        self.n_windows += 1
+        if self.n_windows <= self.warmup_windows:
+            return
+        work = np.asarray(per_replica_work, np.float64)
+        share = np.ones(self.n_replicas)
+        if u is not None and n_rounds > 0:
+            share = np.asarray(u, np.float64) / float(n_rounds)
+        for i, w in enumerate(work):
+            if w > 0 and share[i] > 0:
+                self.observe(i, w, seconds * share[i])
+
+    # ---- the SpeedModel interface the scheduler consumes ----
+    @property
+    def factors(self) -> np.ndarray:
+        """Relative slowdown factors, fastest replica == 1.0.
+
+        Cached between observations: the planner calls ``step_factor`` once
+        per dispatch (hundreds of times per mega-batch plan), while the
+        underlying EMAs only change at ``observe`` time.
+        """
+        if self._factors is not None:
+            return self._factors
+        measured = self.n_obs >= self.min_obs
+        if not measured.any():
+            out = np.ones(self.n_replicas)
+        else:
+            fastest = np.nanmin(np.where(measured, self.t_per_work, np.nan))
+            out = np.ones(self.n_replicas)
+            out[measured] = self.t_per_work[measured] / fastest
+        self._factors = out
+        return out
+
+    def step_factor(self, i: int) -> float:
+        # no synthetic jitter: the EMA already carries the real noise
+        return float(self.factors[i])
+
+    def advance(self) -> None:
+        """Drift is tracked by the EMA itself; nothing to simulate."""
+
+
+@dataclass
 class CostModel:
     """Virtual step time of one batch on one replica.
 
     time = speed_i * (overhead + work_cost * work_units)
 
     ``work_units`` is total nnz for sparse batches (cuSPARSE-like
-    cardinality sensitivity) or total tokens for LM batches.
+    cardinality sensitivity) or total tokens for LM batches. ``speed`` is
+    either the simulated ``SpeedModel`` or a ``MeasuredSpeedModel`` — the
+    cost model only consumes the shared ``step_factor`` interface.
     """
 
-    speed: SpeedModel
+    speed: "SpeedModel | MeasuredSpeedModel"
     overhead: float = 1.0e-3
     work_cost: float = 2.0e-6
 

@@ -37,6 +37,7 @@ class Dispatch:
     start_t: float
     end_t: float
     payload: object = None  # the actual batch (set when a fetch_fn is given)
+    work: int = 0           # work units (nnz/tokens) that priced this step
 
 
 @dataclass
@@ -52,6 +53,14 @@ class MegaBatchPlan:
         out = np.zeros((self.n_rounds, n_replicas), np.int64)
         for d in self.dispatches:
             out[d.round, d.replica] = d.n_samples
+        return out
+
+    def per_replica_work(self, n_replicas: int) -> np.ndarray:
+        """(R,) total work units dispatched to each replica — the
+        denominator when a MeasuredSpeedModel attributes wall time."""
+        out = np.zeros(n_replicas, np.float64)
+        for d in self.dispatches:
+            out[d.replica] += d.work
         return out
 
     def payload_grid(self, n_replicas: int, min_rounds: int = 0) -> list[list]:
@@ -103,7 +112,9 @@ class DynamicScheduler:
             dt = self.cost.step_time(i, work)
             start = float(self.clock.t[i])
             self.clock.advance(i, dt)
-            dispatches.append(Dispatch(i, int(u[i]), take, start, start + dt, payload))
+            dispatches.append(
+                Dispatch(i, int(u[i]), take, start, start + dt, payload, int(work))
+            )
             u[i] += 1
             remaining -= take
         barrier = self.clock.barrier()
@@ -131,7 +142,9 @@ class DynamicScheduler:
                 dt = self.cost.step_time(i, work)
                 start = float(self.clock.t[i])
                 self.clock.advance(i, dt)
-                dispatches.append(Dispatch(i, r, int(b), start, start + dt, payload))
+                dispatches.append(
+                    Dispatch(i, r, int(b), start, start + dt, payload, int(work))
+                )
         barrier = self.clock.barrier()
         self.cost.speed.advance()
         return MegaBatchPlan(

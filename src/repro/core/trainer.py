@@ -15,9 +15,20 @@ are RowSparseGrad (DESIGN.md §3) — the trainer then runs the row-sparse
 update path (``sparse_grads=False`` forces dense autodiff, the
 differential oracle). The legacy ``{'init': ..., 'loss_fn': ...}`` dict is
 still accepted and coerced. A *provider* supplies padded fixed-slot
-batches (data/providers.py). Distribution: the same jitted round function
-runs single-device (tests) or sharded — leaves carry a leading replica dim
-R which the launcher shards over the replica mesh axis.
+batches (data/providers.py).
+
+Placement (DESIGN.md §5, selected by ``cfg.placement``):
+  * ``vmap`` (default) — every replica lives in one device program,
+    vectorized over the leading R dim. Single-device; the differential
+    oracle for the sharded mode.
+  * ``sharded`` — the leading replica dim of params/momentum/batches is
+    laid out over a 1-D ``replica`` device mesh with ``shard_map``: each
+    shard runs its own replicas' rounds (same traced round_body, same
+    jit/donation semantics per shard), and the barrier merge /
+    replica-norm reductions become collectives (psum / axis-gather) over
+    the mesh axis. Algorithm hooks are placement-agnostic: cross-replica
+    math inside RoundTransforms goes through the placement-aware helpers
+    (core/algorithms/base.py ``replica_axis_name``).
 
 Execution engines (DESIGN.md §1):
   * ``scan`` (default) — device-resident mega-batch engine. The whole plan
@@ -35,6 +46,7 @@ strategy hooks behave identically under either executor.
 """
 from __future__ import annotations
 
+import functools
 import time
 from dataclasses import dataclass, field
 from typing import Any, Optional
@@ -42,20 +54,24 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ElasticConfig
 from repro.core import adaptive_sgd as asgd
 from repro.core import algorithms
-from repro.core.heterogeneity import CostModel, SpeedModel
-from repro.core.scheduler import DynamicScheduler, MegaBatchPlan
+from repro.core.heterogeneity import CostModel, MeasuredSpeedModel, SpeedModel
+from repro.core.scheduler import DynamicScheduler
 from repro.models.protocol import TrainableModel, as_trainable_model
 from repro.optim.sgd import SGDConfig, init_momentum, sgd_update
+from repro.sharding.rules import REPLICA_AXIS, replica_mesh, replica_spec
 from repro.utils import tree as tu
 from repro.utils.logging import MetricsLog, log
 
 PyTree = Any
 
 ENGINES = ("scan", "legacy_loop")
+PLACEMENTS = ("vmap", "sharded")
 
 
 def _next_pow2(n: int) -> int:
@@ -91,13 +107,32 @@ class ElasticTrainer:
     sparse_grads: bool = True        # use the model's row-sparse grad path if
                                      # it provides one; False = dense autodiff
                                      # (the differential oracle, DESIGN.md §3)
+    mesh: Optional[Mesh] = None      # replica mesh for cfg.placement='sharded'
+                                     # (None = build one over the local devices)
     seed: int = 0
 
     def __post_init__(self):
         if self.engine not in ENGINES:
             raise ValueError(f"engine must be one of {ENGINES}, got {self.engine!r}")
+        if self.cfg.placement not in PLACEMENTS:
+            raise ValueError(
+                f"cfg.placement must be one of {PLACEMENTS}, got {self.cfg.placement!r}"
+            )
         self.model = as_trainable_model(self.model)
         self.algo = algorithms.get(self.cfg.algorithm)
+        if self.cfg.placement == "sharded":
+            if self.mesh is None:
+                self.mesh = replica_mesh(self.cfg.n_replicas)
+            if REPLICA_AXIS not in self.mesh.shape:
+                raise ValueError(
+                    f"sharded placement needs a {REPLICA_AXIS!r} mesh axis, "
+                    f"got {tuple(self.mesh.axis_names)}"
+                )
+            if self.cfg.n_replicas % self.mesh.shape[REPLICA_AXIS] != 0:
+                raise ValueError(
+                    f"n_replicas={self.cfg.n_replicas} not divisible by the "
+                    f"replica mesh ({self.mesh.shape[REPLICA_AXIS]} devices)"
+                )
         if self.speed is None:
             self.speed = SpeedModel(self.cfg.n_replicas, seed=self.seed)
         self.cost = CostModel(self.speed)
@@ -122,11 +157,22 @@ class ElasticTrainer:
         # cache stable across mega-batches.
         self._transforms = self.algo.round_transforms(self.cfg)
 
+        # Collective axis of the sharded placement: inside shard_map the
+        # leading R dim of every leaf covers only this shard's replicas, so
+        # cross-replica reductions (metrics, live-gating, merges) must fold
+        # the other shards in over this axis. None under vmap — every
+        # reduction below then lowers exactly as the single-program
+        # original. Same helper the algorithm hooks use, so engine and
+        # strategies can never disagree on the axis.
+        axis = algorithms.replica_axis_name(self.cfg)
+
         def round_body(replicas, momentum, batch, lr_vec, update_mask, transforms):
             """One lockstep round; shared by both engines (traced inside the
-            scan for the device-resident engine, jitted alone for legacy).
-            The algorithm's RoundTransforms trace here, so strategy behavior
-            is engine-independent by construction."""
+            scan for the device-resident engine, jitted alone for legacy)
+            and by both placements (vectorized whole under 'vmap', mapped
+            over the replica mesh under 'sharded'). The algorithm's
+            RoundTransforms trace here, so strategy behavior is
+            engine-independent by construction."""
             (loss, aux), grads = jax.vmap(grad_fn)(replicas, batch)
             if transforms.grad_transform is not None:
                 grads = transforms.grad_transform(grads, update_mask)
@@ -141,8 +187,15 @@ class ElasticTrainer:
             )
             if transforms.post_round is not None:
                 adjusted = transforms.post_round(new_replicas)
-                # fully-masked (bucket-padding) rounds must be exact no-ops
-                live = update_mask.max() > 0
+                # fully-masked (bucket-padding) rounds must be exact no-ops;
+                # liveness spans the whole mesh — a shard whose local
+                # replicas are all masked must still apply the correction
+                # when a replica elsewhere is live (its collectives traced
+                # unconditionally above, so every shard participates)
+                live_local = update_mask.max()
+                live = (
+                    jax.lax.pmax(live_local, axis) if axis else live_local
+                ) > 0
                 new_replicas = tu.tree_map(
                     lambda a, r: jnp.where(live, a, r), adjusted, new_replicas
                 )
@@ -153,15 +206,16 @@ class ElasticTrainer:
             }
             return new_replicas, new_momentum, metrics
 
-        self._round = jax.jit(round_body, static_argnames=("transforms",))
-
         def megabatch_fn(replicas, momentum, batches, lr_vec, update_mask,
                          transforms):
             """Scan-fused mega-batch: all rounds in one device program.
 
             ``batches`` leaves and ``update_mask`` carry a leading
             (n_rounds,) scan dim. Per-round metrics reduce on device into
-            4 scalars — the only values the host ever pulls.
+            4 scalars — the only values the host ever pulls. Under the
+            sharded placement the raw per-round sums are psum-ed over the
+            replica axis first, so every shard (and the host) sees
+            whole-population metrics.
             """
 
             def body(carry, xs):
@@ -170,14 +224,23 @@ class ElasticTrainer:
                 new_reps, new_mom, m = round_body(
                     reps, mom, batch, lr_vec, mask, transforms
                 )
-                wsum = jnp.sum(mask)
-                denom = jnp.maximum(wsum, 1.0)
+                sums = jnp.stack(
+                    [
+                        jnp.sum(m["loss"] * mask),
+                        jnp.sum(m["accuracy"] * mask),
+                        jnp.sum(m["n_valid"] * mask),
+                        jnp.sum(mask),
+                    ]
+                )
+                if axis:
+                    sums = jax.lax.psum(sums, axis)
+                denom = jnp.maximum(sums[3], 1.0)
                 stats = jnp.stack(
                     [
-                        jnp.sum(m["loss"] * mask) / denom,
-                        jnp.sum(m["accuracy"] * mask) / denom,
-                        jnp.sum(m["n_valid"] * mask),
-                        (wsum > 0).astype(jnp.float32),
+                        sums[0] / denom,
+                        sums[1] / denom,
+                        sums[2],
+                        (sums[3] > 0).astype(jnp.float32),
                     ]
                 )
                 return (new_reps, new_mom), stats
@@ -199,23 +262,114 @@ class ElasticTrainer:
         # place on device (no copy per mega-batch). CPU XLA cannot donate —
         # skip there to avoid a warning per compile.
         donate = (0, 1) if jax.default_backend() in ("tpu", "gpu") else ()
-        self._megabatch = jax.jit(
-            megabatch_fn,
-            static_argnames=("transforms",),
+
+        def merge_fn(replicas, alphas, global_model, prev_global, gamma):
+            # under shard_map ``replicas``/``alphas`` are this shard's
+            # slices; normalized_merge completes the weighted sum with a
+            # psum over the replica axis and broadcasts locally
+            new_global = asgd.normalized_merge(
+                replicas, alphas, global_model, prev_global, gamma,
+                axis_name=axis,
+            )
+            R_local = jax.tree_util.tree_leaves(replicas)[0].shape[0]
+            new_replicas = tu.tree_broadcast_replicas(new_global, R_local)
+            return new_global, new_replicas
+
+        if axis is None:
+            self._round = jax.jit(round_body, static_argnames=("transforms",))
+            self._megabatch = jax.jit(
+                megabatch_fn,
+                static_argnames=("transforms",),
+                donate_argnums=donate,
+            )
+            self._merge = jax.jit(merge_fn, static_argnames=("gamma",))
+            self._norms = jax.jit(lambda r: tu.tree_l2_norm_per_replica(r))
+        else:
+            self._build_sharded_executors(round_body, megabatch_fn, merge_fn,
+                                          donate)
+        self._eval = jax.jit(loss_fn)
+
+    def _build_sharded_executors(self, round_body, megabatch_fn, merge_fn,
+                                 donate):
+        """shard_map the engine entry points over the 1-D replica mesh.
+
+        The traced bodies are the *same* functions the vmap placement jits —
+        only the leading R dim they see shrinks to this shard's replica
+        slice, and the reductions gated on the axis name become real
+        collectives. RoundTransforms cannot ride through shard_map as a jit
+        static argument, so the stable per-trainer object is closed over
+        instead (same jit-cache behavior; the wrappers assert call sites
+        keep passing the identical object).
+        """
+        transforms = self._transforms
+        s0, s1 = replica_spec(0), replica_spec(1)
+
+        jit_round = jax.jit(
+            shard_map(
+                lambda r, m, b, lr, mask: round_body(
+                    r, m, b, lr, mask, transforms
+                ),
+                mesh=self.mesh,
+                # state/batch leaves are (R, ...): the replica dim leads
+                in_specs=(s0, s0, s0, s0, s0),
+                # per-replica metric vectors gather back to (R,)
+                out_specs=(s0, s0, s0),
+                check_rep=False,
+            )
+        )
+        jit_megabatch = jax.jit(
+            shard_map(
+                lambda r, m, b, lr, mask: megabatch_fn(
+                    r, m, b, lr, mask, transforms
+                ),
+                mesh=self.mesh,
+                # stacked batches/mask are (n_rounds, R, ...): dim 1 shards
+                in_specs=(s0, s0, s1, s0, s1),
+                # the psum-ed scalar metrics are replicated on every shard
+                out_specs=(s0, s0, P()),
+                check_rep=False,
+            ),
             donate_argnums=donate,
         )
 
-        def merge_fn(replicas, alphas, global_model, prev_global, gamma):
-            new_global = asgd.normalized_merge(
-                replicas, alphas, global_model, prev_global, gamma
-            )
-            R = jax.tree_util.tree_leaves(replicas)[0].shape[0]
-            new_replicas = tu.tree_broadcast_replicas(new_global, R)
-            return new_global, new_replicas
+        def _round(replicas, momentum, batch, lr_vec, update_mask, transforms):
+            assert transforms is self._transforms
+            return jit_round(replicas, momentum, batch, lr_vec, update_mask)
 
-        self._merge = jax.jit(merge_fn, static_argnames=("gamma",))
-        self._norms = jax.jit(lambda r: tu.tree_l2_norm_per_replica(r))
-        self._eval = jax.jit(loss_fn)
+        def _megabatch(replicas, momentum, batches, lr_vec, update_mask,
+                       transforms):
+            assert transforms is self._transforms
+            return jit_megabatch(
+                replicas, momentum, batches, lr_vec, update_mask
+            )
+
+        @functools.partial(jax.jit, static_argnames=("gamma",))
+        def merge_sharded(replicas, alphas, global_model, prev_global, gamma):
+            # per-shard weighted partials -> psum inside normalized_merge;
+            # every shard holds the replicated new global (out_spec P()) and
+            # its (R_local, ...) broadcast, reassembled to the full replica
+            # tree. globals/prev ride in replicated; None pytrees are empty
+            # and match the P() prefix spec trivially.
+            return shard_map(
+                functools.partial(merge_fn, gamma=gamma),
+                mesh=self.mesh,
+                in_specs=(s0, s0, P(), P()),
+                out_specs=(P(), s0),
+                check_rep=False,
+            )(replicas, alphas, global_model, prev_global)
+
+        self._round = _round
+        self._megabatch = _megabatch
+        self._merge = merge_sharded
+        self._norms = jax.jit(
+            shard_map(
+                tu.tree_l2_norm_per_replica,
+                mesh=self.mesh,
+                in_specs=(s0,),
+                out_specs=s0,
+                check_rep=False,
+            )
+        )
 
     # ------------------------------------------------------------------
     # jitted tensor math exposed to Algorithm.merge implementations
@@ -334,9 +488,21 @@ class ElasticTrainer:
             self._run_rounds_legacy if self.engine == "legacy_loop"
             else self._run_rounds_scan
         )
+        # measured-speed feedback (DESIGN.md §5): time the real execution of
+        # the mega-batch and feed it back so the *next* plan's virtual clock
+        # runs on observed relative speeds instead of simulated factors. The
+        # engines sync metrics to host before returning, so the window
+        # brackets actual device work.
+        measure = isinstance(self.speed, MeasuredSpeedModel)
+        t_start = self.speed.begin() if measure else None
         replicas, momentum, train_loss, train_acc = run_rounds(
             state, plan, b_slots, self._transforms
         )
+        if measure:
+            self.speed.observe_plan(
+                plan.per_replica_work(R), self.speed.elapsed(t_start),
+                u=plan.u, n_rounds=plan.n_rounds,
+            )
 
         # ---- merge (the barrier) + between-mega-batch adaptation ----
         outcome = self.algo.merge(self, state, plan, replicas)

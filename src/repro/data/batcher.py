@@ -107,7 +107,9 @@ def stack_plan_grid(grid: list[list], template: dict) -> dict:
 
 def stack_plan_batches(grid: list[list], template: SparseBatch) -> dict:
     """SparseBatch view of :func:`stack_plan_grid`."""
-    as_dict = lambda p: {f: getattr(p, f) for f in _SPARSE_FIELDS}
+    def as_dict(p):
+        return {f: getattr(p, f) for f in _SPARSE_FIELDS}
+
     return stack_plan_grid(
         [[None if p is None else as_dict(p) for p in row] for row in grid],
         as_dict(template),

@@ -9,7 +9,6 @@ the kernel leaf-wise over a replica-stacked param pytree; it is what
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from .weighted_merge import weighted_merge
 

@@ -31,3 +31,18 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     if multi_pod:
         return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_replica_mesh(n_replicas: int, devices=None):
+    """1-D ``(replica,)`` mesh for ``--placement sharded`` (DESIGN.md §5).
+
+    On a real machine this spans the local accelerators; under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` it spans the
+    virtual CPU devices (the multi-device CI job runs with N=8), and on a
+    bare single-CPU container it degenerates to a size-1 mesh. Delegates to
+    sharding.rules.replica_mesh, which picks the largest device count
+    dividing ``n_replicas``.
+    """
+    from repro.sharding.rules import replica_mesh
+
+    return replica_mesh(n_replicas, devices=devices)

@@ -20,7 +20,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.archs import ARCHS
-from repro.launch import specs as SP
 from repro.models import model as MDL
 from repro.utils.logging import log
 

@@ -12,11 +12,7 @@ replica mesh axis; sharding is supplied by the caller via jit shardings.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core import adaptive_sgd as asgd

@@ -27,13 +27,11 @@ import argparse
 import json
 import os
 
-import numpy as np
-
 from repro.configs.archs import ARCHS
 from repro.configs.base import ElasticConfig
 from repro.core import algorithms
-from repro.core.heterogeneity import SpeedModel
-from repro.core.trainer import ENGINES, ElasticTrainer
+from repro.core.heterogeneity import MeasuredSpeedModel, SpeedModel
+from repro.core.trainer import ENGINES, PLACEMENTS, ElasticTrainer
 from repro.data.providers import SparseProvider, TokenProvider
 from repro.data.xml_synth import make_xml_dataset
 from repro.data.sparse import train_test_split
@@ -85,6 +83,18 @@ def main(argv=None):
     ap.add_argument("--engine", default="scan", choices=list(ENGINES),
                     help="mega-batch executor: device-resident scan (default)"
                          " or the per-round host loop")
+    ap.add_argument("--placement", default="vmap", choices=list(PLACEMENTS),
+                    help="replica placement: single-device vmap (default) or"
+                         " shard_map over a 1-D replica device mesh (spans"
+                         " the local accelerators; on CPU CI, the virtual"
+                         " devices from --xla_force_host_platform_device_count)")
+    ap.add_argument("--speed", default="simulated",
+                    choices=["simulated", "measured"],
+                    help="heterogeneity source for the scheduler's virtual"
+                         " clock: simulated per-replica factors (paper Fig. 1"
+                         " reproduction, deterministic) or relative speeds"
+                         " measured from real round times (closes the paper"
+                         " §3.1 feedback loop on live hardware)")
     ap.add_argument("--dense-grads", action="store_true",
                     help="force dense autodiff instead of the row-sparse"
                          " gradient path (the differential oracle)")
@@ -117,12 +127,24 @@ def main(argv=None):
         algorithm=args.algorithm,
         n_replicas=algorithms.get(args.algorithm).resolve_n_replicas(args.replicas),
         mega_batch=args.mega_batch,
+        placement=args.placement,
     )
-    speed = SpeedModel(ecfg.n_replicas, max_gap=args.hetero, seed=args.seed)
+    if args.speed == "measured":
+        speed = MeasuredSpeedModel(ecfg.n_replicas)
+    else:
+        speed = SpeedModel(ecfg.n_replicas, max_gap=args.hetero, seed=args.seed)
+    mesh = None
+    if args.placement == "sharded":
+        from repro.launch.mesh import make_replica_mesh
+
+        mesh = make_replica_mesh(ecfg.n_replicas)
+        log("replica mesh",
+            devices=mesh.shape["replica"],
+            replicas_per_shard=ecfg.n_replicas // mesh.shape["replica"])
     trainer = ElasticTrainer(
         model=model, provider=provider, cfg=ecfg,
         sgd=SGDConfig(), base_lr=args.lr, speed=speed, seed=args.seed,
-        engine=args.engine, sparse_grads=not args.dense_grads,
+        engine=args.engine, sparse_grads=not args.dense_grads, mesh=mesh,
     )
     state, mlog = trainer.run(
         args.megabatches, test_batches=test_batches, verbose=True

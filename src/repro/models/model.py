@@ -15,7 +15,6 @@ API (consumed by the trainer, launcher and dry-run):
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax

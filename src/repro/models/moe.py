@@ -126,7 +126,6 @@ def moe_ffn(
 
     def dispatch_group(h_g, ids_g, w_g):
         """One token shard: local sort-based dispatch into (E, C, D)."""
-        tg = h_g.shape[0]
         flat = ids_g.reshape(-1).astype(jnp.int32)          # (Tg*k,)
         sort_idx, slots, keep = _dispatch_indices(flat, e, capacity)
         token_of = (sort_idx // top_k).astype(jnp.int32)

@@ -14,6 +14,15 @@ Logical axes used across the zoo:
   ff        — MLP hidden
   vocab     — embedding/vocab rows
   experts   — MoE expert dim
+
+Placement note (DESIGN.md §5): these annotations drive the *GSPMD* path
+(launch/steps.py under a production mesh), where the compiler partitions a
+single program. The trainer's ``placement='sharded'`` replica executor is
+the *manual* path — shard_map already fixes every leaf's layout via the
+replica-axis specs in sharding/rules.py, so no sharding context is
+installed there and ``shard()`` stays a no-op inside its traced bodies;
+``replica_rules()`` below is the mapping the GSPMD entry points use when
+only the replica dim is laid out.
 """
 from __future__ import annotations
 
@@ -39,6 +48,16 @@ def sharding_context(mesh: Mesh, rules: dict):
         yield
     finally:
         set_context(*old)
+
+
+def replica_rules() -> dict:
+    """Logical-axis mapping for a replica-only (1-D) mesh: the elastic
+    replica dim shards over REPLICA_AXIS, everything else is replicated.
+    The GSPMD counterpart of the trainer's shard_map specs."""
+    from repro.sharding.rules import REPLICA_AXIS
+
+    return {"replica": REPLICA_AXIS, "batch": None, "heads": None,
+            "ff": None, "experts": None}
 
 
 def logical_to_spec(axes: tuple, rules: Optional[dict] = None) -> P:

@@ -15,15 +15,50 @@ FSDP-only, exactly like Megatron replicated-KV TP groups).
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import InputShape, ModelConfig
+from repro.configs.base import ModelConfig
 
 PyTree = Any
+
+#: mesh-axis name of the elastic-replica dimension under the 1-D replica
+#: mesh used by the trainer's ``placement='sharded'`` mode (DESIGN.md §5).
+REPLICA_AXIS = "replica"
+
+
+def replica_mesh_size(n_replicas: int, n_devices: int) -> int:
+    """Largest device count <= n_devices that divides ``n_replicas`` (each
+    shard must own the same number of replicas for the collective merge to
+    be a plain psum of equal-size partials)."""
+    return next(d for d in range(min(n_replicas, n_devices), 0, -1)
+                if n_replicas % d == 0)
+
+
+def replica_mesh(n_replicas: int, devices=None) -> Mesh:
+    """1-D ``(replica,)`` mesh for the sharded replica executor.
+
+    On one device this degenerates to a size-1 mesh — the shard_map path
+    still runs, with every collective a no-op, which is what the
+    single-process parity tests exercise.
+    """
+    devices = list(jax.devices() if devices is None else devices)
+    n = replica_mesh_size(n_replicas, len(devices))
+    return Mesh(np.asarray(devices[:n]), (REPLICA_AXIS,))
+
+
+def replica_spec(replica_dim: int = 0) -> P:
+    """PartitionSpec sharding dimension ``replica_dim`` over REPLICA_AXIS.
+
+    ``replica_dim=0`` fits state leaves (R, ...); ``replica_dim=1`` fits the
+    scan engine's whole-plan batches (n_rounds, R, ...). Trailing dims stay
+    unsharded (shard_map pads missing spec entries with None), so one spec
+    serves every leaf of a pytree as a prefix spec.
+    """
+    return P(*([None] * replica_dim + [REPLICA_AXIS]))
 
 
 def axis_size(mesh: Mesh, axis) -> int:
@@ -102,7 +137,6 @@ class MeshAxes:
 def _leaf_spec(path: tuple, shape: tuple, ax: MeshAxes, mesh: Mesh) -> P:
     keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
     name = keys[-1]
-    parent = keys[-2] if len(keys) > 1 else ""
     in_blocks = any(k.startswith("pos") for k in keys) or "layers" in keys
     # stacked scan groups carry a leading (G,) dim
     eff = shape[1:] if in_blocks else shape

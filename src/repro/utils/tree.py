@@ -85,6 +85,36 @@ def tree_weighted_sum_replicas(a: PyTree, alphas) -> PyTree:
     return tree_map(leaf, a)
 
 
+def replica_all_sum(x, axis_name: str | None = None):
+    """Sum ``x`` over all shards of the replica mesh axis.
+
+    ``axis_name=None`` (the vmap placement: every replica lives in this
+    program) is the identity — local reductions over the leading R dim are
+    already global. Under shard_map (``placement='sharded'``) the local R
+    dim only covers this shard's replicas, and cross-replica math must
+    psum the partials over the mesh axis.
+    """
+    return x if axis_name is None else jax.lax.psum(x, axis_name)
+
+
+def tree_replica_mean_keepdims(a: PyTree, axis_name: str | None = None) -> PyTree:
+    """float32 mean over the *global* replica dim, keepdims, leafwise.
+
+    The cross-replica averaging primitive of the sync/crossbow family.
+    With ``axis_name`` set, each shard's local mean is pmean-ed over the
+    replica mesh axis — exact because every shard owns the same number of
+    replicas (sharding.rules.replica_mesh guarantees divisibility).
+    """
+
+    def leaf(l):
+        m = jnp.mean(l.astype(jnp.float32), axis=0, keepdims=True)
+        if axis_name is not None:
+            m = jax.lax.pmean(m, axis_name)
+        return m
+
+    return tree_map(leaf, a)
+
+
 def tree_broadcast_replicas(a: PyTree, n: int) -> PyTree:
     """Broadcast a tree (no replica dim) to a leading replica dim of size n."""
     return tree_map(lambda l: jnp.broadcast_to(l[None], (n,) + l.shape), a)

@@ -53,14 +53,18 @@ def make_case_dataset():
     return train_test_split(full, 0.15)[0]
 
 
-def build_case_trainer(algo: str, engine: str, sparse: bool, ds) -> ElasticTrainer:
+def build_case_trainer(algo: str, engine: str, sparse: bool, ds,
+                       placement: str = "vmap") -> ElasticTrainer:
+    """``placement`` is not part of the recorded goldens (they predate it);
+    the conformance suite passes 'sharded' to replay the same case through
+    the shard_map executor and compare against the vmap run."""
     from repro.core import algorithms
 
     R = algorithms.get(algo).resolve_n_replicas(4)
     prov = SparseProvider.make(ds, seed=CASE_KW["provider_seed"])
     cfg = ElasticConfig.from_bmax(
         CASE_KW["b_max"], algorithm=algo, n_replicas=R,
-        mega_batch=CASE_KW["mega_batch"],
+        mega_batch=CASE_KW["mega_batch"], placement=placement,
     )
     return ElasticTrainer(
         make_model(MODEL_CFG), prov, cfg, base_lr=CASE_KW["base_lr"],

@@ -14,8 +14,8 @@ from __future__ import annotations
 import pytest
 
 try:
-    import hypothesis.strategies as st
-    from hypothesis import given, settings
+    import hypothesis.strategies as st  # noqa: F401  (re-export)
+    from hypothesis import given, settings  # noqa: F401  (re-export)
 
     HAS_HYPOTHESIS = True
 except ModuleNotFoundError:  # hypothesis not installed: stub + skip

@@ -7,7 +7,6 @@ from hypothesis_compat import given, settings, st
 
 from repro.configs.base import ElasticConfig
 from repro.core import adaptive_sgd as asgd
-from repro.utils import tree as tu
 
 CFG = ElasticConfig(b_min=32, b_max=256, beta=16.0, pert_thr=0.1, delta=0.1)
 

@@ -50,14 +50,15 @@ SEED_ALGOS = sorted({k.split("|")[0] for k in GOLDEN["cases"]})
 _cache: dict = {}
 
 
-def _case(algo: str, engine: str, sparse: bool):
+def _case(algo: str, engine: str, sparse: bool, placement: str = "vmap"):
     """One deterministic training run; cached — each (algo, engine, path)
     combination is executed once and shared by all assertions on it."""
-    key = (algo, engine, sparse)
+    key = (algo, engine, sparse, placement)
     if key not in _cache:
         if "ds" not in _cache:
             _cache["ds"] = make_case_dataset()
-        tr = build_case_trainer(algo, engine, sparse, _cache["ds"])
+        tr = build_case_trainer(algo, engine, sparse, _cache["ds"],
+                                placement=placement)
         state = tr.init_state()
         infos = []
         for _ in range(N_MEGA):
@@ -203,6 +204,50 @@ def test_metrics_contract(algo):
     R = algorithms.get(algo).resolve_n_replicas(4)
     assert len(rec["u"]) == len(rec["b"]) == len(rec["alphas"]) == R
     assert np.isfinite(rec["train_loss"])
+
+
+# --------------------------------------------------------------------------
+# sharded placement (DESIGN.md §5): the shard_map replica executor must be a
+# drop-in for the vmapped one, for every registered algorithm x both engines
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+@pytest.mark.parametrize("algo", algorithms.available())
+def test_sharded_placement_parity(algo, engine):
+    """placement='sharded' must reproduce the vmap path. In-process jax has
+    one device, so the replica mesh is size 1: every collective (psum /
+    pmean / pmax) degenerates to the identity and the comparison is
+    BIT-LEVEL — any reduction routed around the collective helpers, or any
+    reordering of the merge math, fails exactly. Real multi-device
+    execution (collectives with >1 shard, float reassociation tolerance)
+    is covered by tests/test_sharded_placement.py in a subprocess with 8
+    virtual devices — the layout the multi-device CI job runs."""
+    st_v, inf_v = _case(algo, engine, True, "vmap")
+    st_s, inf_s = _case(algo, engine, True, "sharded")
+    assert [i["train_loss"] for i in inf_v] == [i["train_loss"] for i in inf_s]
+    assert [i["u"] for i in inf_v] == [i["u"] for i in inf_s]
+    _assert_tree_close(st_v.replicas, st_s.replicas, rtol=0, atol=0)
+    if st_v.global_model is not None:
+        _assert_tree_close(st_v.global_model, st_s.global_model,
+                           rtol=0, atol=0)
+    np.testing.assert_allclose(np.asarray(st_v.b), np.asarray(st_s.b),
+                               rtol=1e-12)
+
+
+def test_sharded_placement_rejects_bad_config():
+    from repro.core.trainer import ElasticTrainer
+
+    if "ds" not in _cache:
+        _cache["ds"] = make_case_dataset()
+    tr = build_case_trainer("adaptive", "scan", True, _cache["ds"])
+    import dataclasses
+
+    with pytest.raises(ValueError, match="placement"):
+        ElasticTrainer(
+            tr.model, tr.provider,
+            dataclasses.replace(tr.cfg, placement="teleported"),
+        )
 
 
 # --------------------------------------------------------------------------

@@ -5,7 +5,6 @@ For each of the 10 assigned architectures: instantiate the REDUCED variant
 asserting output shapes and absence of NaNs. Decode steps likewise.
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -9,7 +9,7 @@ from hypothesis_compat import given, settings, st
 from repro.data.batcher import SampleStream, SparseBatcher
 from repro.data.libsvm import read_libsvm, write_libsvm
 from repro.data.providers import SparseProvider, TokenProvider
-from repro.data.sparse import pack_batch, subset, train_test_split
+from repro.data.sparse import subset, train_test_split
 from repro.data.xml_synth import make_paper_like, make_xml_dataset
 
 

@@ -4,11 +4,9 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.launch.hlo_analysis import (
-    Costs, analyze, parse_computations, shape_numel_bytes,
+    Costs, analyze, shape_numel_bytes,
 )
 
 

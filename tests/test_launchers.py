@@ -1,9 +1,7 @@
 """End-to-end launcher smoke tests (CPU, reduced configs)."""
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch import serve as serve_mod
 from repro.launch import train as train_mod
@@ -27,6 +25,31 @@ def test_train_launcher_lm_reduced():
         "--mega-batch", "2", "--b-max", "4", "--seq-len", "32",
     ])
     assert len(mlog.records) == 1
+    assert np.isfinite(mlog.records[-1]["train_loss"])
+
+
+def test_train_launcher_sharded_placement():
+    """--placement sharded through the public launcher (in-process: size-1
+    replica mesh; the 4-shard layout runs in the multi-device CI job)."""
+    state, mlog = train_mod.main([
+        "--workload", "xml", "--algorithm", "adaptive", "--replicas", "2",
+        "--placement", "sharded", "--megabatches", "2", "--mega-batch", "4",
+        "--b-max", "16", "--samples", "512", "--features", "256",
+        "--classes", "64", "--avg-nnz", "16", "--hidden", "32", "--lr", "1.0",
+    ])
+    assert len(mlog.records) == 2
+    assert np.isfinite(mlog.records[-1]["train_loss"])
+
+
+def test_train_launcher_measured_speed():
+    """--speed measured wires the MeasuredSpeedModel feedback loop."""
+    state, mlog = train_mod.main([
+        "--workload", "xml", "--algorithm", "delayed_sync", "--replicas", "2",
+        "--speed", "measured", "--megabatches", "2", "--mega-batch", "4",
+        "--b-max", "16", "--samples", "512", "--features", "256",
+        "--classes", "64", "--avg-nnz", "16", "--hidden", "32", "--lr", "1.0",
+    ])
+    assert len(mlog.records) == 2
     assert np.isfinite(mlog.records[-1]["train_loss"])
 
 

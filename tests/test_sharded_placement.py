@@ -1,0 +1,251 @@
+"""Sharded replica executor (DESIGN.md §5): real multi-device parity and the
+measured-speed feedback loop.
+
+The parity layer runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the virtual device
+count must be fixed before jax initializes), trains every registered
+algorithm on both engines under ``placement='sharded'`` (R=4 replicas over a
+4-device replica mesh, collectives with real cross-shard traffic) and
+compares losses/update-counts/params against the vmap placement in the same
+process. Bit-level single-device parity lives in tests/test_algorithms.py;
+this file owns the >1-shard float-reassociation-tolerance layer — the same
+suite the multi-device CI job executes.
+
+MeasuredSpeedModel is unit-tested in-process with an injected fake timer
+(no sleeping, no hardware dependence).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.heterogeneity import CostModel, MeasuredSpeedModel
+from repro.sharding.rules import REPLICA_AXIS, replica_mesh, replica_mesh_size
+
+# --------------------------------------------------------------------------
+# replica mesh construction
+# --------------------------------------------------------------------------
+
+
+def test_replica_mesh_single_device_degenerates():
+    mesh = replica_mesh(4)  # in-process: one CPU device
+    assert mesh.shape[REPLICA_AXIS] in (1, 2, 4)
+    assert 4 % mesh.shape[REPLICA_AXIS] == 0
+
+
+def test_replica_mesh_picks_largest_divisor():
+    assert replica_mesh_size(4, 6) == 4   # more devices than replicas
+    assert replica_mesh_size(4, 4) == 4   # one replica per device
+    assert replica_mesh_size(6, 4) == 3   # 6 replicas / 3 devices = 2 each
+    assert replica_mesh_size(5, 4) == 1   # prime R: no even split
+    assert replica_mesh_size(8, 8) == 8
+
+
+# --------------------------------------------------------------------------
+# MeasuredSpeedModel: the paper-§3.1 feedback loop, driven by a fake clock
+# --------------------------------------------------------------------------
+
+
+class FakeTimer:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_measured_speed_prior_is_homogeneous():
+    sm = MeasuredSpeedModel(4, timer=FakeTimer())
+    np.testing.assert_allclose(sm.factors, np.ones(4))
+    assert sm.step_factor(2) == 1.0
+
+
+def test_measured_speed_relative_factors():
+    sm = MeasuredSpeedModel(3, timer=FakeTimer())
+    # replica 0 does 100 work units in 1s, replica 1 the same work in 2s
+    sm.observe(0, 100, 1.0)
+    sm.observe(1, 100, 2.0)
+    f = sm.factors
+    assert f[0] == 1.0            # fastest normalized to 1
+    np.testing.assert_allclose(f[1], 2.0)
+    assert f[2] == 1.0            # unmeasured replica keeps the prior
+
+
+def test_measured_speed_ema_tracks_drift():
+    sm = MeasuredSpeedModel(2, ema=0.5, timer=FakeTimer())
+    sm.observe(0, 100, 1.0)
+    sm.observe(1, 100, 1.0)
+    for _ in range(8):            # replica 1 slows down over time
+        sm.observe(1, 100, 3.0)
+    assert sm.factors[1] > 2.5    # EMA converged toward the 3x slowdown
+
+
+def test_measured_speed_timer_is_injectable():
+    ft = FakeTimer()
+    sm = MeasuredSpeedModel(2, timer=ft)
+    h = sm.begin()
+    ft.t += 1.5
+    assert sm.elapsed(h) == pytest.approx(1.5)
+
+
+def test_measured_speed_observe_plan_attribution():
+    """Lockstep attribution: same wall window, more work => faster."""
+    sm = MeasuredSpeedModel(3, warmup_windows=0, timer=FakeTimer())
+    sm.observe_plan(np.array([200.0, 100.0, 0.0]), 1.0)
+    f = sm.factors
+    assert f[0] == 1.0 and f[1] == pytest.approx(2.0) and f[2] == 1.0
+
+
+def test_measured_speed_warmup_discards_compile_window():
+    """The first window is jit-compile-dominated; it must not bias EMAs."""
+    sm = MeasuredSpeedModel(2, timer=FakeTimer())  # warmup_windows=1 default
+    sm.observe_plan(np.array([100.0, 100.0]), 60.0)   # compile-heavy window
+    np.testing.assert_allclose(sm.factors, np.ones(2))
+    assert (sm.n_obs == 0).all()
+    sm.observe_plan(np.array([100.0, 50.0]), 1.0)     # steady state
+    assert (sm.n_obs == 1).all()
+
+
+def test_measured_speed_share_normalization_no_amplification():
+    """Planner asymmetry must not masquerade as a speed difference.
+
+    On homogeneous hardware the planner may hand one replica an extra
+    round (the leftover dispatch). Charged the *whole* window, the
+    short-changed replica would measure slower, receive even less work
+    next plan, and the asymmetry would self-amplify without any hardware
+    cause. Charged only its scheduled share (u_i/n_rounds), equal
+    per-round throughput measures equal speed."""
+    sm = MeasuredSpeedModel(2, warmup_windows=0, timer=FakeTimer())
+    # homogeneous machine: 3 rounds of work for r0, 2 for r1, same b=32;
+    # window = 3 equal rounds
+    sm.observe_plan(np.array([96.0, 64.0]), 3.0, u=np.array([3, 2]),
+                    n_rounds=3)
+    np.testing.assert_allclose(sm.factors, np.ones(2))
+
+
+def test_measured_speed_ignores_degenerate_samples():
+    sm = MeasuredSpeedModel(2, timer=FakeTimer())
+    sm.observe(0, 0, 1.0)       # no work: unattributable
+    sm.observe(1, 100, 0.0)     # no elapsed time: clock glitch
+    np.testing.assert_allclose(sm.factors, np.ones(2))
+
+
+def test_measured_speed_drives_cost_model_and_scheduler():
+    """The measured factors must steer the virtual clock: after observing a
+    2x-slower replica, the availability-driven plan gives it fewer rounds."""
+    from repro.configs.base import ElasticConfig
+    from repro.core.scheduler import DynamicScheduler
+
+    sm = MeasuredSpeedModel(2, timer=FakeTimer())
+    sm.observe(0, 100, 1.0)
+    sm.observe(1, 100, 2.0)
+    sched = DynamicScheduler(ElasticConfig(n_replicas=2), CostModel(sm))
+    plan = sched.plan_megabatch(np.array([32, 32]), 32 * 20)
+    assert plan.u[0] > plan.u[1]
+
+
+def test_trainer_feeds_measured_speed():
+    """End-to-end: a trainer built with MeasuredSpeedModel accumulates real
+    observations for every replica once past the compile-warmup window."""
+    sys.path.insert(0, os.path.dirname(__file__))
+    from golden.generate import build_case_trainer, make_case_dataset
+    from repro.core.trainer import ElasticTrainer
+
+    base = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    tr = ElasticTrainer(
+        base.model, base.provider, base.cfg, base_lr=0.5, seed=3,
+        speed=MeasuredSpeedModel(base.cfg.n_replicas),
+    )
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state)      # warmup window: discarded
+    assert (tr.speed.n_obs == 0).all()
+    state, _ = tr.run_megabatch(state)      # first measured window
+    assert (tr.speed.n_obs > 0).all()
+    assert np.isfinite(tr.speed.t_per_work).all()
+
+
+# --------------------------------------------------------------------------
+# multi-device parity (the CI multi-device job's core suite)
+# --------------------------------------------------------------------------
+
+PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+    import dataclasses
+    import numpy as np
+    import jax
+    import jax.tree_util as jtu
+
+    assert len(jax.devices()) == 8, jax.devices()
+
+    from golden.generate import build_case_trainer, make_case_dataset
+    from repro.core import algorithms
+    from repro.core.trainer import ElasticTrainer
+    from repro.sharding.rules import REPLICA_AXIS
+
+    ds = make_case_dataset()
+
+    def run(algo, engine, placement):
+        tr = build_case_trainer(algo, engine, True, ds, placement=placement)
+        if placement == "sharded":
+            want = 1 if algo == "single" else 4
+            assert tr.mesh.shape[REPLICA_AXIS] == want, tr.mesh
+        state = tr.init_state()
+        infos = []
+        for _ in range(2):
+            state, info = tr.run_megabatch(state)
+            infos.append(info)
+        return state, infos
+
+    def close(a, b, rtol, atol):
+        for la, lb in zip(jtu.tree_leaves(a), jtu.tree_leaves(b)):
+            np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                       rtol=rtol, atol=atol)
+
+    for algo in sorted(algorithms.available()):
+        for engine in ("scan", "legacy_loop"):
+            st_v, inf_v = run(algo, engine, "vmap")
+            st_s, inf_s = run(algo, engine, "sharded")
+            np.testing.assert_allclose(
+                [i["train_loss"] for i in inf_v],
+                [i["train_loss"] for i in inf_s], rtol=1e-5, atol=1e-6,
+                err_msg=f"{algo}/{engine} losses diverged",
+            )
+            assert [i["u"] for i in inf_v] == [i["u"] for i in inf_s], (
+                f"{algo}/{engine} update counts diverged"
+            )
+            close(st_v.replicas, st_s.replicas, rtol=2e-3, atol=1e-5)
+            if st_v.global_model is not None:
+                close(st_v.global_model, st_s.global_model,
+                      rtol=2e-3, atol=1e-5)
+            print(f"OK {algo}/{engine}")
+    print("PARITY-SUITE-PASSED")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_vs_vmap_multidevice_parity():
+    """All registered algorithms x both engines on a real 4-shard replica
+    mesh must match the single-program vmap oracle."""
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), os.path.join(root, "tests"),
+         env.get("PYTHONPATH", "")]
+    )
+    env.pop("XLA_FLAGS", None)  # the script pins its own device count
+    proc = subprocess.run(
+        [sys.executable, "-c", PARITY_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=1200,
+    )
+    assert proc.returncode == 0, (
+        f"parity subprocess failed\n--- stdout ---\n{proc.stdout}"
+        f"\n--- stderr ---\n{proc.stderr[-4000:]}"
+    )
+    assert "PARITY-SUITE-PASSED" in proc.stdout
