@@ -10,8 +10,21 @@ are deterministic and hardware-independent. Emits ``BENCH_algorithms.json``
 at the repo root so future PRs (and new registered algorithms) have a
 comparable trajectory.
 
+``--elastic-schedule "0:4,10:6,15:3"`` (DESIGN.md §6) runs every algorithm
+under replica churn — workers joining/leaving at those mega-batch
+boundaries — instead of fixed membership, so the elasticity scenario is
+benchmarkable head-to-head. Off by default: the committed
+``BENCH_algorithms.json`` baseline (and its regression gate) is the
+fixed-membership run; churn results default to
+``BENCH_algorithms_elastic.json`` so they can never overwrite it, and
+``scripts/bench_check.py`` rejects any baseline produced with a schedule.
+Algorithms that clamp membership (``single``) follow their resize policy
+and run unchanged.
+
   PYTHONPATH=src python -m benchmarks.algorithms
   PYTHONPATH=src python -m benchmarks.algorithms --megabatches 4   # CI smoke
+  PYTHONPATH=src python -m benchmarks.algorithms \
+      --elastic-schedule "0:4,10:6,15:3"   # -> BENCH_algorithms_elastic.json
 """
 from __future__ import annotations
 
@@ -20,6 +33,7 @@ import json
 import os
 
 from repro.core import algorithms
+from repro.launch.train import parse_elastic_schedule
 
 from .common import AMAZON, fmt, run_one, summarize
 
@@ -34,8 +48,27 @@ def main(argv=None):
     ap.add_argument("--replicas", type=int, default=4)
     ap.add_argument("--target", type=float, default=TARGET_ACC)
     ap.add_argument("--engine", default="scan")
-    ap.add_argument("--out", default="BENCH_algorithms.json")
+    ap.add_argument("--elastic-schedule", default="",
+                    help="'megabatch:R' list (e.g. '0:4,10:6,15:3'):"
+                         " benchmark under replica churn (DESIGN.md §6)."
+                         " Default: fixed membership, matching the"
+                         " committed baseline")
+    ap.add_argument("--out", default=None,
+                    help="output json (default BENCH_algorithms.json, or"
+                         " BENCH_algorithms_elastic.json under an elastic"
+                         " schedule so churn runs never overwrite the"
+                         " fixed-membership baseline the bench gate reads)")
     args = ap.parse_args(argv)
+
+    schedule = (
+        parse_elastic_schedule(args.elastic_schedule)
+        if args.elastic_schedule else None
+    )
+    if args.out is None:
+        args.out = ("BENCH_algorithms_elastic.json" if schedule
+                    else "BENCH_algorithms.json")
+    if schedule and 0 in schedule:
+        args.replicas = schedule[0]
 
     rows = []
     print(f"{'algorithm':<14} {'best_acc':>9} {'tta(vt)':>9} "
@@ -47,6 +80,7 @@ def main(argv=None):
             algorithm=algo,
             n_replicas=args.replicas,
             engine=args.engine,
+            resize_schedule=schedule,
         )
         s = summarize(mlog, args.target)
         row = {"algorithm": algo, **s}
@@ -62,6 +96,10 @@ def main(argv=None):
         "megabatches": args.megabatches,
         "n_replicas": args.replicas,
         "engine": args.engine,
+        "elastic_schedule": (
+            {str(mb): schedule[mb] for mb in sorted(schedule)}
+            if schedule else None
+        ),
         "rows": rows,
     }
     path = os.path.join(os.path.dirname(os.path.dirname(__file__)), args.out)

@@ -103,9 +103,14 @@ def build_trainer(
     return trainer, test_batches
 
 
-def run_one(w: Workload, n_megabatches: int = N_MEGABATCHES, **kw) -> MetricsLog:
+def run_one(w: Workload, n_megabatches: int = N_MEGABATCHES,
+            resize_schedule: dict[int, int] | None = None, **kw) -> MetricsLog:
+    """``resize_schedule`` ({megabatch: R}, DESIGN.md §6) drives workers
+    joining/leaving mid-benchmark; None = fixed membership (the committed
+    BENCH baselines)."""
     trainer, test_batches = build_trainer(w, **kw)
-    _, mlog = trainer.run(n_megabatches, test_batches=test_batches)
+    _, mlog = trainer.run(n_megabatches, test_batches=test_batches,
+                          resize_schedule=resize_schedule)
     return mlog
 
 

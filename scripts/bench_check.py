@@ -19,6 +19,10 @@ artifact plumbing: the bench job regenerates the jsons in the workspace and
 this script diffs them against the committed versions. ``--baseline-dir``
 points at saved copies instead (e.g. when comparing two fresh runs).
 
+Whether or not the gate trips, a per-metric drift table (baseline vs fresh
+value, signed drift) is printed for every benchmark so CI logs show the
+metric trajectories over time, not only the failures.
+
 Exit code 0 = within tolerance, 1 = regression, 2 = usage/data error.
 
     python scripts/bench_check.py                  # all benchmarks, 25%
@@ -47,6 +51,17 @@ def headline_metrics(name: str, data: dict) -> dict[str, tuple[float | None, boo
         for k, v in data.get("speedup_sparse_over_dense", {}).items():
             out[f"speedup_sparse_over_dense/{k}"] = (float(v), True)
     elif name == "BENCH_algorithms.json":
+        if data.get("elastic_schedule"):
+            # churn runs are a different experiment: their TTA/accuracy is
+            # not comparable to the fixed-membership baseline this gate
+            # protects (benchmarks/algorithms.py writes them to
+            # BENCH_algorithms_elastic.json by default)
+            raise KeyError(
+                f"{name} was produced with an elastic schedule "
+                f"({data['elastic_schedule']}) — the regression gate only "
+                "compares fixed-membership runs; regenerate without "
+                "--elastic-schedule"
+            )
         for row in data.get("rows", []):
             algo = row["algorithm"]
             tta = row.get("tta")
@@ -68,35 +83,53 @@ def load_baseline(name: str, baseline_dir: str | None, repo_root: str) -> dict:
     return json.loads(blob)
 
 
-def check_file(name: str, fresh: dict, base: dict, tolerance: float) -> list[str]:
-    """Returns a list of human-readable regression messages (empty = pass)."""
+def _fmt(v: float | None) -> str:
+    return "never" if v is None else f"{v:.4g}"
+
+
+def check_file(name: str, fresh: dict, base: dict,
+               tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns ``(regression messages, per-metric drift table lines)``.
+
+    The table covers *every* headline metric — it is printed on pass as
+    well as on fail, so CI logs show the metric trajectories instead of
+    only surfacing them once a run trips the tolerance.
+    """
     fresh_m = headline_metrics(name, fresh)
     base_m = headline_metrics(name, base)
     if not base_m:
         # a renamed/absent headline key must not disable the gate silently
-        return [f"{name}: baseline contains no headline metrics — "
-                "benchmark output schema changed? update headline_metrics()"]
-    failures = []
+        return ([f"{name}: baseline contains no headline metrics — "
+                 "benchmark output schema changed? update headline_metrics()"],
+                [])
+    failures, table = [], []
+    width = max(len(k) for k in base_m)
     for key, (b_val, higher_better) in sorted(base_m.items()):
+        f_val = fresh_m[key][0] if key in fresh_m else None
+        drift = "n/a"
+        if b_val is not None and f_val is not None and b_val != 0:
+            rel = (f_val - b_val) / b_val
+            drift = f"{rel:+.1%}"
+        status = "ok"
         if key not in fresh_m:
             failures.append(f"{name}:{key} missing from the fresh run")
-            continue
-        f_val, _ = fresh_m[key]
-        if b_val is None:
-            continue                    # baseline never reached the target
-        if f_val is None:
+            status = "MISSING"
+        elif b_val is None:
+            pass                        # baseline never reached the target
+        elif f_val is None:
             failures.append(
                 f"{name}:{key} baseline={b_val:.4g} but the fresh run never "
                 "reached the target"
             )
-            continue
-        if higher_better:
+            status = "REGRESSED"
+        elif higher_better:
             floor = b_val * (1.0 - tolerance)
             if f_val < floor:
                 failures.append(
                     f"{name}:{key} regressed: {f_val:.4g} < {floor:.4g} "
                     f"(baseline {b_val:.4g}, tolerance {tolerance:.0%})"
                 )
+                status = "REGRESSED"
         else:
             ceil = b_val * (1.0 + tolerance)
             if f_val > ceil:
@@ -104,7 +137,13 @@ def check_file(name: str, fresh: dict, base: dict, tolerance: float) -> list[str
                     f"{name}:{key} regressed: {f_val:.4g} > {ceil:.4g} "
                     f"(baseline {b_val:.4g}, tolerance {tolerance:.0%})"
                 )
-    return failures
+                status = "REGRESSED"
+        arrow = "higher=better" if higher_better else "lower=better"
+        table.append(
+            f"  {key:<{width}}  baseline={_fmt(b_val):>8}  "
+            f"fresh={_fmt(f_val):>8}  drift={drift:>7}  [{arrow}] {status}"
+        )
+    return failures, table
 
 
 def main(argv=None) -> int:
@@ -132,13 +171,15 @@ def main(argv=None) -> int:
             print(f"bench_check: cannot load {name}: {e}", file=sys.stderr)
             return 2
         try:
-            msgs = check_file(name, fresh, base, args.tolerance)
+            msgs, table = check_file(name, fresh, base, args.tolerance)
         except KeyError as e:
             print(f"bench_check: {e.args[0]}", file=sys.stderr)
             return 2
         status = "FAIL" if msgs else "ok"
         n = len(headline_metrics(name, base))
         print(f"[bench_check] {name}: {n} headline metrics — {status}")
+        for line in table:      # drift trajectory, printed on pass AND fail
+            print(line)
         failures.extend(msgs)
 
     for msg in failures:

@@ -31,7 +31,12 @@ see the jit rules on ``RoundTransforms``):
     clock charges (per-round for eager synchronous schemes, 1 for
     barrier-only or latency-hiding schemes).
   * ``resolve_n_replicas(requested)`` — clamp the replica count
-    (``single`` forces 1).
+    (``single`` forces 1). Also consulted by ``ElasticTrainer.resize``,
+    so a clamped algorithm turns membership changes into no-ops.
+  * ``resize_policy`` / ``resize_b(...)`` — how the algorithm handles a
+    replica-membership change between mega-batches (DESIGN.md §6): whether
+    survivors restart from the merged global or keep their diverged
+    parameters, and what batch sizes the new population plans with.
 
 Registering a new algorithm requires **no trainer edits**::
 
@@ -125,6 +130,10 @@ class RoundTransforms:
     * build the object once per trainer (``round_transforms`` is called a
       single time, from ``_build_jits``) — returning fresh closures per
       call would defeat the jit cache.
+    * stay R-agnostic: the object survives ``ElasticTrainer.resize``
+      (DESIGN.md §6 reuses it so jit caches persist across membership
+      changes), so the callables must read the replica count from the
+      leaves they are given, never bake ``cfg.n_replicas`` into a closure.
 
     ``grad_transform(grads, update_mask) -> grads`` runs after the vmapped
     per-replica gradient computation and before the SGD update; grads may
@@ -173,6 +182,24 @@ class Algorithm:
     #: registry key, set by @register
     name: str = "?"
 
+    #: membership-change contract (DESIGN.md §6), consumed by
+    #: ``ElasticTrainer.resize``:
+    #:   'merge'    — default. Every current replica (including the ones
+    #:                about to leave) contributes a final normalized merge;
+    #:                the whole new population restarts from the merged
+    #:                global. Right for the averaging family, whose barrier
+    #:                already resets replicas to the global each mega-batch.
+    #:   'preserve' — the final merge still folds the leavers' updates into
+    #:                the global, but *surviving* replicas keep their own
+    #:                (diverged) parameters; only joiners clone the merged
+    #:                global. Right for independent-learner schemes
+    #:                (CROSSBOW) where replica divergence is the algorithm.
+    #:   'fixed'    — membership cannot change; ``resize`` raises. Use for
+    #:                algorithms whose math is pinned to a replica count
+    #:                (``single`` instead clamps via resolve_n_replicas, so
+    #:                a resize request degenerates to a no-op).
+    resize_policy: str = "merge"
+
     # ---- state ----
     def init_state_extras(self, cfg, params, keep_global_copies: bool) -> StateExtras:
         # paper: initialize at b_max (Fig. 10a)
@@ -218,6 +245,36 @@ class Algorithm:
 
     def resolve_n_replicas(self, requested: int) -> int:
         return requested
+
+    # ---- membership change (DESIGN.md §6) ----
+    def resize_b(self, cfg, b: np.ndarray, lr: np.ndarray, base_lr: float):
+        """Per-replica batch sizes / learning rates for the resized
+        population. ``cfg`` is the *new* config (``cfg.n_replicas`` is the
+        new R); ``b``/``lr`` are the old per-replica arrays.
+
+        Default: survivors keep their adapted values — Algorithm 1 resumes
+        from them at the new R on the next ``adapt`` — and joiners start at
+        the algorithm's initial batch size (``init_state_extras`` is
+        re-consulted with ``params=None, keep_global_copies=False``; an
+        algorithm whose initial ``b`` needs the params must override this
+        hook) with the linear-scaling learning rate. Algorithms whose
+        per-replica share depends on R itself (``sync``: b_max/R equal
+        shares) re-derive everyone's values instead.
+        """
+        new_R = cfg.n_replicas
+        keep = min(len(b), new_R)
+        new_b = np.empty(new_R, np.float64)
+        new_b[:keep] = np.asarray(b, np.float64)[:keep]
+        new_lr = np.empty(new_R, np.float64)
+        new_lr[:keep] = np.asarray(lr, np.float64)[:keep]
+        if new_R > keep:  # a shrink needs no joiner values (and must not
+            #               require init_state_extras to accept params=None)
+            init_b = np.asarray(
+                self.init_state_extras(cfg, None, False).b, np.float64
+            )
+            new_b[keep:] = init_b[keep:new_R]
+            new_lr[keep:] = base_lr * new_b[keep:] / cfg.b_max
+        return new_b, new_lr
 
 
 # --------------------------------------------------------------------------

@@ -39,6 +39,12 @@ _correct_jit = jax.jit(crossbow_correct, static_argnames=("c",))
 
 @register("crossbow")
 class Crossbow(Algorithm):
+    #: independent learners: replica divergence *is* the algorithm, so a
+    #: membership change must not collapse survivors onto the center —
+    #: leavers fold into the center via the final merge, joiners clone it,
+    #: survivors keep their own parameters (DESIGN.md §6).
+    resize_policy = "preserve"
+
     def round_transforms(self, cfg):
         c = cfg.crossbow_correction
         axis = replica_axis_name(cfg)

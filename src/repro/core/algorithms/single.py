@@ -26,4 +26,7 @@ class SingleWorker(Algorithm):
         )
 
     def resolve_n_replicas(self, requested):
+        # also neutralizes membership changes: ElasticTrainer.resize
+        # resolves through this first, so any elastic schedule degenerates
+        # to the single worker (a 1 -> 1 resize is a no-op, never an error)
         return 1

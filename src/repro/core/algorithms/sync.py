@@ -45,6 +45,14 @@ class GradientAggregation(Algorithm):
         b0 = max(cfg.b_min, cfg.b_max // cfg.n_replicas)
         return StateExtras(b=np.full(cfg.n_replicas, float(b0)))
 
+    def resize_b(self, cfg, b, lr, base_lr):
+        """The per-replica share b_max/R depends on R itself: a membership
+        change re-derives *everyone's* batch size (and linear-scaled lr) so
+        the aggregated global batch stays b_max at the new population."""
+        extras = self.init_state_extras(cfg, None, False)
+        new_b = np.asarray(extras.b, np.float64)
+        return new_b, base_lr * new_b / cfg.b_max
+
     def round_transforms(self, cfg):
         axis = replica_axis_name(cfg)  # None under vmap: helpers reduce as-is
         return RoundTransforms(

@@ -57,10 +57,32 @@ class SpeedModel:
         return float(f)
 
     def advance(self) -> None:
-        """Random-walk drift of the underlying factors (optional)."""
+        """Random-walk drift of the underlying factors (optional).
+
+        Factors are *relative* speeds (module docstring): the fastest
+        replica defines 1.0. The random walk is therefore renormalized so
+        the minimum stays pinned at 1.0 — without it, a walk that happened
+        to slow every replica would inflate the whole fleet's virtual time
+        with no relative-speed content, and the clip below could only ever
+        push factors up, never back down. After renormalization the clip
+        bounds the *gap*: the slowest replica stays within 2x the paper's
+        observed spread of the fastest.
+        """
         if self.drift > 0:
             self.factors *= np.exp(self._rng.normal(0.0, self.drift, self.n_replicas))
+            self.factors /= self.factors.min()  # fastest pinned to 1.0
             self.factors = np.clip(self.factors, 1.0, 1.0 + 2 * self.max_gap)
+
+    def resize(self, new_R: int) -> None:
+        """Membership change (DESIGN.md §6): survivors keep their current
+        factors, joiners start at the homogeneous prior (1.0). After a
+        shrink the surviving factors are renormalized so the fastest is
+        again 1.0 (relative speeds are the contract)."""
+        keep = min(self.n_replicas, new_R)
+        factors = np.ones(new_R)
+        factors[:keep] = self.factors[:keep]
+        self.factors = factors / factors.min()
+        self.n_replicas = new_R
 
 
 @dataclass
@@ -101,6 +123,7 @@ class MeasuredSpeedModel:
     t_per_work: np.ndarray = field(init=False)      # EMA seconds/work-unit
     n_obs: np.ndarray = field(init=False)
     n_windows: int = field(init=False, default=0)
+    skip_windows: int = field(init=False, default=0)  # see discard_next_window
     _factors: np.ndarray = field(init=False, default=None)  # cache; see factors
 
     def __post_init__(self):
@@ -150,14 +173,29 @@ class MeasuredSpeedModel:
         live round for everyone and the coarse fallback converges toward
         homogeneous factors. True per-replica contrast needs per-shard
         timing callbacks feeding ``observe`` directly (ROADMAP).
+
+        Degenerate plans (``n_rounds == 0`` or an all-zero ``u`` — e.g. a
+        fully-masked mega-batch, or a resize boundary where nothing was
+        dispatched) carry no attributable signal: the window is still
+        counted (so the compile-warmup discard stays aligned with the
+        trainer's mega-batch sequence) but no EMA is charged — previously
+        such a window either divided by a zero round count or silently fell
+        back to charging everyone the whole window.
         """
         self.n_windows += 1
         if self.n_windows <= self.warmup_windows:
             return
+        if self.skip_windows > 0:       # e.g. first window after a resize
+            self.skip_windows -= 1
+            return
         work = np.asarray(per_replica_work, np.float64)
-        share = np.ones(self.n_replicas)
-        if u is not None and n_rounds > 0:
-            share = np.asarray(u, np.float64) / float(n_rounds)
+        if u is not None:
+            u_arr = np.asarray(u, np.float64)
+            if n_rounds <= 0 or not np.any(u_arr > 0):
+                return  # window counted above; nothing attributable
+            share = u_arr / float(n_rounds)
+        else:
+            share = np.ones(self.n_replicas)
         for i, w in enumerate(work):
             if w > 0 and share[i] > 0:
                 self.observe(i, w, seconds * share[i])
@@ -189,6 +227,36 @@ class MeasuredSpeedModel:
 
     def advance(self) -> None:
         """Drift is tracked by the EMA itself; nothing to simulate."""
+
+    def discard_next_window(self) -> None:
+        """Mark the next ``observe_plan`` window unattributable (still
+        counted in ``n_windows``, charged to no EMA). Used after events
+        that put non-round work inside the timed window — e.g. a resize to
+        a first-visit population shape jit-compiles the executors there,
+        and compile seconds at EMA weight would corrupt every live
+        replica's factor exactly like the cold-start warmup would."""
+        self.skip_windows += 1
+
+    def resize(self, new_R: int) -> None:
+        """Membership change (DESIGN.md §6): surviving replicas keep their
+        measured EMAs and observation counts; joiners start unmeasured
+        (NaN seconds-per-work, zero observations), so their factor is the
+        homogeneous prior until ``min_obs`` real windows land. The warmup
+        counter is *not* reset (cold-start warmup happened once), but the
+        first post-resize window is discarded: a resize to a *first-visit*
+        population shape compiles the executors inside the next timed
+        window (revisited shapes are cache hits, DESIGN.md §6, but one
+        discarded mega-batch per rare resize event is cheap insurance
+        either way)."""
+        keep = min(self.n_replicas, new_R)
+        t_per_work = np.full(new_R, np.nan)
+        n_obs = np.zeros(new_R, np.int64)
+        t_per_work[:keep] = self.t_per_work[:keep]
+        n_obs[:keep] = self.n_obs[:keep]
+        self.t_per_work, self.n_obs = t_per_work, n_obs
+        self.n_replicas = new_R
+        self._factors = None
+        self.discard_next_window()
 
 
 @dataclass
@@ -225,6 +293,17 @@ class VirtualClock:
 
     def earliest(self) -> int:
         return int(np.argmin(self.t))
+
+    def resize(self, new_R: int) -> None:
+        """Membership change (DESIGN.md §6): survivors keep their virtual
+        timelines; joiners enter at the latest survivor time (they cannot
+        have been available in the past — between mega-batches all clocks
+        sit at the barrier anyway, so this is the barrier time)."""
+        keep = min(self.n_replicas, new_R)
+        t = np.full(new_R, float(self.t[:keep].max()) if keep else 0.0)
+        t[:keep] = self.t[:keep]
+        self.t = t
+        self.n_replicas = new_R
 
     def advance(self, i: int, dt: float) -> None:
         self.t[i] += dt

@@ -90,6 +90,18 @@ class DynamicScheduler:
     def __post_init__(self):
         self.clock = VirtualClock(self.cfg.n_replicas)
 
+    def resize(self, cfg: ElasticConfig) -> None:
+        """Adopt a new replica count between mega-batches (DESIGN.md §6).
+
+        Re-planning needs nothing beyond the new config and a clock of the
+        right width: survivor timelines carry over, joiners enter at the
+        barrier (see ``VirtualClock.resize``). The speed model behind
+        ``cost`` is resized by the trainer before this is called, so the
+        next ``plan_megabatch`` prices every replica of the new population.
+        """
+        self.cfg = cfg
+        self.clock.resize(cfg.n_replicas)
+
     def plan_megabatch(
         self, b: np.ndarray, mega_samples: int, fetch_fn=None
     ) -> MegaBatchPlan:

@@ -43,9 +43,18 @@ Execution engines (DESIGN.md §1):
 Both engines trace the *same* ``round_body`` — including the algorithm's
 ``RoundTransforms`` (gradient transform + post-round correction) — so the
 strategy hooks behave identically under either executor.
+
+Elastic membership (DESIGN.md §6): the replica count R may change between
+mega-batches — ``resize`` re-plans (scheduler + speed model at the new R),
+re-shards (replica mesh + cached shard_map executors), and carries state
+(final normalized merge folds leaving replicas in; joiners clone the merged
+global with zero momentum). ``run(resize_schedule=...)`` drives it from a
+mega-batch→R schedule; jit caches are reused so revisiting a population
+shape recompiles nothing.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from dataclasses import dataclass, field
@@ -55,7 +64,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.experimental.shard_map import shard_map
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ElasticConfig
 from repro.core import adaptive_sgd as asgd
@@ -64,7 +73,7 @@ from repro.core.heterogeneity import CostModel, MeasuredSpeedModel, SpeedModel
 from repro.core.scheduler import DynamicScheduler
 from repro.models.protocol import TrainableModel, as_trainable_model
 from repro.optim.sgd import SGDConfig, init_momentum, sgd_update
-from repro.sharding.rules import REPLICA_AXIS, replica_mesh, replica_spec
+from repro.sharding.rules import REPLICA_AXIS, ReplicaMeshPool, replica_spec
 from repro.utils import tree as tu
 from repro.utils.logging import MetricsLog, log
 
@@ -120,25 +129,34 @@ class ElasticTrainer:
             )
         self.model = as_trainable_model(self.model)
         self.algo = algorithms.get(self.cfg.algorithm)
+        self._mesh_pool = None
+        self._exec_cache = {}            # shard count -> sharded executors
         if self.cfg.placement == "sharded":
             if self.mesh is None:
-                self.mesh = replica_mesh(self.cfg.n_replicas)
-            if REPLICA_AXIS not in self.mesh.shape:
-                raise ValueError(
-                    f"sharded placement needs a {REPLICA_AXIS!r} mesh axis, "
-                    f"got {tuple(self.mesh.axis_names)}"
-                )
-            if self.cfg.n_replicas % self.mesh.shape[REPLICA_AXIS] != 0:
-                raise ValueError(
-                    f"n_replicas={self.cfg.n_replicas} not divisible by the "
-                    f"replica mesh ({self.mesh.shape[REPLICA_AXIS]} devices)"
-                )
+                self._mesh_pool = ReplicaMeshPool()
+                self.mesh = self._mesh_pool.mesh_for(self.cfg.n_replicas)
+            else:
+                if REPLICA_AXIS not in self.mesh.shape:
+                    raise ValueError(
+                        f"sharded placement needs a {REPLICA_AXIS!r} mesh axis, "
+                        f"got {tuple(self.mesh.axis_names)}"
+                    )
+                if self.cfg.n_replicas % self.mesh.shape[REPLICA_AXIS] != 0:
+                    raise ValueError(
+                        f"n_replicas={self.cfg.n_replicas} not divisible by the "
+                        f"replica mesh ({self.mesh.shape[REPLICA_AXIS]} devices)"
+                    )
+                # a resize may need meshes of other shard counts; they are
+                # drawn from the same devices the caller chose
+                self._mesh_pool = ReplicaMeshPool(list(self.mesh.devices.flat))
+                self._mesh_pool.adopt(self.mesh)
         if self.speed is None:
             self.speed = SpeedModel(self.cfg.n_replicas, seed=self.seed)
         self.cost = CostModel(self.speed)
         self.scheduler = DynamicScheduler(self.cfg, self.cost)
         self._eval_batches = None        # pre-staged device test batches
-        self._eval_batches_src = None    # the list they were staged from
+        self._eval_batches_src = None    # pins the staged list + its batches
+        self._eval_batches_key = None    # content fingerprint of that list
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -276,6 +294,10 @@ class ElasticTrainer:
             return new_global, new_replicas
 
         if axis is None:
+            # Built once per trainer and NEVER rebuilt on resize: R enters
+            # these programs only through leaf shapes, so jax.jit's own
+            # cache keys them per population size — a resize back to a
+            # previously-seen R recompiles nothing (DESIGN.md §6).
             self._round = jax.jit(round_body, static_argnames=("transforms",))
             self._megabatch = jax.jit(
                 megabatch_fn,
@@ -285,9 +307,24 @@ class ElasticTrainer:
             self._merge = jax.jit(merge_fn, static_argnames=("gamma",))
             self._norms = jax.jit(lambda r: tu.tree_l2_norm_per_replica(r))
         else:
-            self._build_sharded_executors(round_body, megabatch_fn, merge_fn,
-                                          donate)
+            # the traced bodies are mesh-independent; shard_map binds them
+            # to self.mesh per shard count, cached across resizes
+            self._bodies = (round_body, megabatch_fn, merge_fn, donate)
+            self._install_sharded_executors()
         self._eval = jax.jit(loss_fn)
+
+    def _install_sharded_executors(self):
+        """Bind (or re-bind, after a resize) the engine entry points to the
+        current ``self.mesh``, reusing previously built executors for a
+        shard count seen before — their jit caches then key the new R only
+        by leaf shapes, so revisiting a population shape recompiles
+        nothing (DESIGN.md §6)."""
+        key = int(self.mesh.shape[REPLICA_AXIS])
+        execs = self._exec_cache.get(key)
+        if execs is None:
+            execs = self._build_sharded_executors(*self._bodies)
+            self._exec_cache[key] = execs
+        self._round, self._megabatch, self._merge, self._norms = execs
 
     def _build_sharded_executors(self, round_body, megabatch_fn, merge_fn,
                                  donate):
@@ -299,9 +336,12 @@ class ElasticTrainer:
         collectives. RoundTransforms cannot ride through shard_map as a jit
         static argument, so the stable per-trainer object is closed over
         instead (same jit-cache behavior; the wrappers assert call sites
-        keep passing the identical object).
+        keep passing the identical object). Returns the executor tuple
+        ``(round, megabatch, merge, norms)``; the wrappers carry their
+        underlying jitted callable as ``_jit`` for cache introspection.
         """
         transforms = self._transforms
+        mesh = self.mesh
         s0, s1 = replica_spec(0), replica_spec(1)
 
         jit_round = jax.jit(
@@ -309,7 +349,7 @@ class ElasticTrainer:
                 lambda r, m, b, lr, mask: round_body(
                     r, m, b, lr, mask, transforms
                 ),
-                mesh=self.mesh,
+                mesh=mesh,
                 # state/batch leaves are (R, ...): the replica dim leads
                 in_specs=(s0, s0, s0, s0, s0),
                 # per-replica metric vectors gather back to (R,)
@@ -322,7 +362,7 @@ class ElasticTrainer:
                 lambda r, m, b, lr, mask: megabatch_fn(
                     r, m, b, lr, mask, transforms
                 ),
-                mesh=self.mesh,
+                mesh=mesh,
                 # stacked batches/mask are (n_rounds, R, ...): dim 1 shards
                 in_specs=(s0, s0, s1, s0, s1),
                 # the psum-ed scalar metrics are replicated on every shard
@@ -343,6 +383,9 @@ class ElasticTrainer:
                 replicas, momentum, batches, lr_vec, update_mask
             )
 
+        _round._jit = jit_round
+        _megabatch._jit = jit_megabatch
+
         @functools.partial(jax.jit, static_argnames=("gamma",))
         def merge_sharded(replicas, alphas, global_model, prev_global, gamma):
             # per-shard weighted partials -> psum inside normalized_merge;
@@ -352,24 +395,44 @@ class ElasticTrainer:
             # and match the P() prefix spec trivially.
             return shard_map(
                 functools.partial(merge_fn, gamma=gamma),
-                mesh=self.mesh,
+                mesh=mesh,
                 in_specs=(s0, s0, P(), P()),
                 out_specs=(P(), s0),
                 check_rep=False,
             )(replicas, alphas, global_model, prev_global)
 
-        self._round = _round
-        self._megabatch = _megabatch
-        self._merge = merge_sharded
-        self._norms = jax.jit(
+        norms = jax.jit(
             shard_map(
                 tu.tree_l2_norm_per_replica,
-                mesh=self.mesh,
+                mesh=mesh,
                 in_specs=(s0,),
                 out_specs=s0,
                 check_rep=False,
             )
         )
+        return _round, _megabatch, merge_sharded, norms
+
+    def compile_cache_size(self) -> int:
+        """Total compiled-variant count across every engine executor built
+        so far (all placements, all cached shard counts). The DESIGN.md §6
+        zero-recompile contract is testable through this number: a resize
+        back to a previously-seen population shape, followed by a
+        mega-batch whose round count lands in a previously-seen pow2
+        bucket, must leave it unchanged."""
+
+        def size(fn):
+            inner = getattr(fn, "_jit", fn)
+            cache_size = getattr(inner, "_cache_size", None)
+            return int(cache_size()) if cache_size is not None else 0
+
+        fns = [self._eval]
+        if self._exec_cache:
+            for execs in self._exec_cache.values():
+                fns.extend(execs)
+        else:
+            fns.extend([self._round, self._megabatch, self._merge,
+                        self._norms])
+        return sum(size(f) for f in fns)
 
     # ------------------------------------------------------------------
     # jitted tensor math exposed to Algorithm.merge implementations
@@ -408,6 +471,131 @@ class ElasticTrainer:
             momentum=momentum,
             b=b,
             lr=lr,
+        )
+
+    # ------------------------------------------------------------------
+    # elastic membership: resize R between mega-batches (DESIGN.md §6)
+    # ------------------------------------------------------------------
+    def resize(self, state: ElasticState, new_R: int) -> ElasticState:
+        """Change the replica count between mega-batches.
+
+        The elasticity the paper's title promises beyond adaptive batch
+        sizes: workers joining or leaving mid-run. Resizing is a
+        re-plan / re-shard / carry-state barrier:
+
+        * **merge first** — every *current* replica (including the ones
+          about to leave) contributes a final normalized merge (weights
+          ``b_i / sum(b)``, Algorithm 2 line 3 — between mega-batches the
+          update counts are spent, so batch sizes are the availability
+          signal), executed on the *old* executors before any re-shard.
+          Leaving replicas' updates are therefore never dropped.
+        * **carry state** — under the default ``resize_policy='merge'``
+          the new population restarts from the merged global; under
+          ``'preserve'`` (CROSSBOW) survivors keep their own diverged
+          parameters and only joiners clone the merged global. Survivors
+          keep their momentum buffers; joiners start with zero momentum.
+          The global-momentum pair restarts (``prev_global := merged``) so
+          Algorithm 2's momentum term never mixes pre/post-resize
+          populations. Speed EMAs / simulated factors carry for survivors;
+          joiners start at the homogeneous prior. Batch sizes and lrs
+          resize through ``algo.resize_b`` (Algorithm 1 then resumes from
+          them at the new R on the next ``adapt``).
+        * **re-plan** — the scheduler adopts the new config; survivor
+          virtual clocks carry, joiners enter at the barrier time.
+        * **re-shard** — under ``placement='sharded'`` the replica mesh is
+          re-drawn from the trainer's device pool and the state trees are
+          device_put onto it. Executors (and their jit caches) are reused
+          per shard count, and the vmap jits are never rebuilt at all, so
+          a resize back to a previously-seen population shape recompiles
+          nothing (``compile_cache_size``).
+
+        Resolves through ``algo.resolve_n_replicas`` first (``single``
+        turns any schedule into a no-op); ``resize_policy='fixed'`` raises.
+        Returns the state to continue from — like ``run_megabatch``, treat
+        the input state as consumed.
+        """
+        new_R = int(self.algo.resolve_n_replicas(int(new_R)))
+        R = self.cfg.n_replicas
+        if new_R == R:
+            return state
+        if new_R < 1:
+            raise ValueError(f"cannot resize to {new_R} replicas")
+        policy = getattr(self.algo, "resize_policy", "merge")
+        if policy == "fixed":
+            raise ValueError(
+                f"algorithm {self.algo.name!r} pins its replica membership "
+                f"(resize_policy='fixed'); cannot resize {R} -> {new_R}"
+            )
+
+        # ---- final normalized merge over the outgoing population ----
+        alphas = np.asarray(state.b, np.float64)
+        alphas = alphas / alphas.sum()
+        merged, _ = self.merge_models(
+            state.replicas, alphas, None, None, 0.0
+        )
+
+        # ---- carry parameters / momentum to the new population ----
+        keep = min(R, new_R)
+
+        def grown(l, g, fill):
+            """(R, ...) leaf -> (new_R, ...): survivors' rows + fill rows."""
+            parts = [l[:keep]]
+            if new_R > keep:
+                extra = (
+                    jnp.broadcast_to(g[None], (new_R - keep,) + g.shape)
+                    if fill == "global"
+                    else jnp.zeros((new_R - keep,) + l.shape[1:], l.dtype)
+                )
+                parts.append(extra)
+            return jnp.concatenate(parts, 0) if len(parts) > 1 else parts[0]
+
+        if policy == "preserve":
+            new_replicas = tu.tree_map(
+                lambda l, g: grown(l, g, "global"), state.replicas, merged
+            )
+        else:  # 'merge': everyone restarts from the merged global
+            new_replicas = tu.tree_broadcast_replicas(merged, new_R)
+        new_momentum = None
+        if state.momentum is not None:
+            new_momentum = tu.tree_map(
+                lambda l: grown(l, None, "zeros"), state.momentum
+            )
+        new_global = merged if state.global_model is not None else None
+        new_prev = merged if state.prev_global is not None else None
+
+        # ---- re-plan: config, batch plan, speeds, virtual clocks ----
+        new_cfg = dataclasses.replace(self.cfg, n_replicas=new_R)
+        new_b, new_lr = self.algo.resize_b(
+            new_cfg, state.b, state.lr, self.base_lr
+        )
+        self.cfg = new_cfg
+        self.speed.resize(new_R)
+        self.scheduler.resize(new_cfg)
+
+        # ---- re-shard: new replica mesh + cached executors ----
+        if self.cfg.placement == "sharded":
+            self.mesh = self._mesh_pool.mesh_for(new_R)
+            self._install_sharded_executors()
+            shard0 = NamedSharding(self.mesh, replica_spec(0))
+            repl = NamedSharding(self.mesh, P())
+            put0 = lambda l: jax.device_put(l, shard0)  # noqa: E731
+            putr = lambda l: jax.device_put(l, repl)  # noqa: E731
+            new_replicas = tu.tree_map(put0, new_replicas)
+            if new_momentum is not None:
+                new_momentum = tu.tree_map(put0, new_momentum)
+            if new_global is not None:
+                new_global = tu.tree_map(putr, new_global)
+            if new_prev is not None:
+                new_prev = tu.tree_map(putr, new_prev)
+
+        return ElasticState(
+            replicas=new_replicas,
+            global_model=new_global,
+            prev_global=new_prev,
+            momentum=new_momentum,
+            b=np.asarray(new_b, np.float64),
+            lr=np.asarray(new_lr, np.float64),
+            megabatch_idx=state.megabatch_idx,
         )
 
     # ------------------------------------------------------------------
@@ -528,6 +716,7 @@ class ElasticTrainer:
             megabatch_idx=state.megabatch_idx + 1,
         )
         info = {
+            "n_replicas": R,
             "u": plan.u.tolist(),
             "b": np.round(np.asarray(new_b), 2).tolist(),
             "lr": np.round(np.asarray(new_lr), 6).tolist(),
@@ -543,17 +732,34 @@ class ElasticTrainer:
     # ------------------------------------------------------------------
     # evaluation + full run
     # ------------------------------------------------------------------
+    @staticmethod
+    def _eval_cache_key(test_batches: list) -> tuple:
+        """Content fingerprint of a test set: length plus the identities of
+        the first/last payloads. List identity alone (the PR-3 cache key)
+        went stale when a caller rebuilt the list object *or* mutated the
+        same list in place — both now change the fingerprint. (A swap of
+        only a middle element still aliases; callers doing surgical edits
+        should pass a fresh list.)"""
+        return (
+            id(test_batches),
+            len(test_batches),
+            id(test_batches[0]) if test_batches else None,
+            id(test_batches[-1]) if test_batches else None,
+        )
+
     def _staged_test_batches(self, test_batches: list) -> list:
         """Stack + upload the test set once; reuse the device arrays.
 
         ``evaluate`` used to re-stack and re-upload every payload on every
-        call — pure host overhead repeated each eval. The staged batches are
-        cached per test_batches list identity (evals always pass the same
-        list), so repeated evaluation only runs the jitted loss. The source
-        list is kept referenced so its id cannot be recycled by a different
-        list between calls.
+        call — pure host overhead repeated each eval. The staged batches
+        are cached by the content fingerprint above, so repeated
+        evaluation of the same test set only runs the jitted loss while a
+        rebuilt or mutated test set re-stages. The source list *and its
+        current payloads* are kept referenced so none of the fingerprint
+        ids can be recycled by new objects between calls.
         """
-        if self._eval_batches_src is not test_batches:
+        key = self._eval_cache_key(test_batches)
+        if self._eval_batches_key != key:
             staged = []
             for payload in test_batches:
                 batch = {
@@ -562,7 +768,8 @@ class ElasticTrainer:
                 }
                 staged.append(batch)
             self._eval_batches = staged
-            self._eval_batches_src = test_batches
+            self._eval_batches_key = key
+            self._eval_batches_src = (test_batches, list(test_batches))
         return self._eval_batches
 
     def evaluate(self, params: PyTree, test_batches: list) -> dict:
@@ -584,11 +791,23 @@ class ElasticTrainer:
         test_batches: Optional[list] = None,
         eval_every: int = 1,
         verbose: bool = False,
+        resize_schedule: Optional[dict[int, int]] = None,
     ) -> tuple[ElasticState, MetricsLog]:
+        """Train ``n_megabatches`` mega-batches.
+
+        ``resize_schedule`` maps a 0-based mega-batch index to the replica
+        count that takes effect *before* that mega-batch runs (the
+        launcher's ``--elastic-schedule "0:4,20:6,40:3"``): workers join or
+        leave at those boundaries via ``resize``. An entry matching the
+        current R is a no-op, so a constant schedule reproduces the
+        unscheduled run bit-for-bit.
+        """
         state = self.init_state()
         mlog = MetricsLog()
         t0 = time.perf_counter()
         for mb in range(n_megabatches):
+            if resize_schedule is not None and mb in resize_schedule:
+                state = self.resize(state, resize_schedule[mb])
             state, info = self.run_megabatch(state)
             if test_batches is not None and (mb + 1) % eval_every == 0:
                 ev = self.evaluate(state.global_model, test_batches)

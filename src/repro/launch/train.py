@@ -13,6 +13,11 @@ identical algorithm semantics; only the mesh differs.
 paper's Adaptive SGD, the baselines, and any plugin registered through the
 public Algorithm API (e.g. the ABS-SGD-style ``delayed_sync``).
 
+``--elastic-schedule`` drives the paper's other elasticity axis — workers
+joining/leaving mid-run (DESIGN.md §6): a ``megabatch:R`` list resizes the
+replica population at those mega-batch boundaries (re-plan, re-shard, carry
+momentum) instead of forcing a restart.
+
 Examples:
   PYTHONPATH=src python -m repro.launch.train --workload xml \
       --algorithm adaptive --replicas 4 --megabatches 20
@@ -20,6 +25,8 @@ Examples:
       --algorithm delayed_sync --replicas 4 --megabatches 20
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --algorithm adaptive --megabatches 5
+  PYTHONPATH=src python -m repro.launch.train --workload xml \
+      --algorithm adaptive --megabatches 60 --elastic-schedule "0:4,20:6,40:3"
 """
 from __future__ import annotations
 
@@ -39,6 +46,37 @@ from repro.models import model as MDL
 from repro.models.xml_mlp import XMLMLPConfig, make_model as make_xml_model
 from repro.optim.sgd import SGDConfig
 from repro.utils.logging import log
+
+
+def parse_elastic_schedule(spec: str) -> dict[int, int]:
+    """``"0:4,20:6,40:3"`` -> ``{0: 4, 20: 6, 40: 3}``.
+
+    Keys are 0-based mega-batch indices; values the replica count that
+    takes effect before that mega-batch. Entries may come in any order;
+    duplicates keep the last occurrence (argparse-style override).
+    """
+    out: dict[int, int] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        try:
+            mb_str, r_str = part.split(":")
+            mb, r = int(mb_str), int(r_str)
+        except ValueError:
+            raise ValueError(
+                f"bad --elastic-schedule entry {part!r}; expected"
+                " 'megabatch:replicas' (e.g. '0:4,20:6,40:3')"
+            ) from None
+        if mb < 0 or r < 1:
+            raise ValueError(
+                f"bad --elastic-schedule entry {part!r}: mega-batch index"
+                " must be >= 0 and replica count >= 1"
+            )
+        out[mb] = r
+    if not out:
+        raise ValueError("--elastic-schedule is empty")
+    return out
 
 
 def build_xml_workload(args):
@@ -99,6 +137,13 @@ def main(argv=None):
                     help="force dense autodiff instead of the row-sparse"
                          " gradient path (the differential oracle)")
     ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--elastic-schedule", default="",
+                    help="'megabatch:R' list, e.g. '0:4,20:6,40:3': resize"
+                         " the replica population at those mega-batch"
+                         " boundaries (workers joining/leaving, DESIGN.md"
+                         " §6). An entry at 0 overrides --replicas; the"
+                         " trainer re-plans, re-shards and carries momentum"
+                         " at each boundary")
     ap.add_argument("--megabatches", type=int, default=10)
     ap.add_argument("--mega-batch", type=int, default=20,
                     help="batches per mega-batch (paper default 100)")
@@ -122,6 +167,14 @@ def main(argv=None):
     else:
         model, provider, test_batches = build_lm_workload(args)
 
+    schedule = None
+    if args.elastic_schedule:
+        schedule = parse_elastic_schedule(args.elastic_schedule)
+        if 0 in schedule:
+            args.replicas = schedule[0]  # initial membership
+        log("elastic schedule",
+            events={mb: schedule[mb] for mb in sorted(schedule)})
+
     ecfg = ElasticConfig.from_bmax(
         args.b_max,
         algorithm=args.algorithm,
@@ -134,7 +187,9 @@ def main(argv=None):
     else:
         speed = SpeedModel(ecfg.n_replicas, max_gap=args.hetero, seed=args.seed)
     mesh = None
-    if args.placement == "sharded":
+    if args.placement == "sharded" and schedule is None:
+        # with an elastic schedule the trainer owns the mesh: it draws
+        # per-population meshes from the full local device pool as R changes
         from repro.launch.mesh import make_replica_mesh
 
         mesh = make_replica_mesh(ecfg.n_replicas)
@@ -147,7 +202,8 @@ def main(argv=None):
         engine=args.engine, sparse_grads=not args.dense_grads, mesh=mesh,
     )
     state, mlog = trainer.run(
-        args.megabatches, test_batches=test_batches, verbose=True
+        args.megabatches, test_batches=test_batches, verbose=True,
+        resize_schedule=schedule,
     )
     final = mlog.records[-1] if mlog.records else {}
     log("final",

@@ -22,7 +22,12 @@ the *manual* path — shard_map already fixes every leaf's layout via the
 replica-axis specs in sharding/rules.py, so no sharding context is
 installed there and ``shard()`` stays a no-op inside its traced bodies;
 ``replica_rules()`` below is the mapping the GSPMD entry points use when
-only the replica dim is laid out.
+only the replica dim is laid out. That separation is also what keeps
+elastic membership (DESIGN.md §6) simple: when ``ElasticTrainer.resize``
+swaps the replica mesh between mega-batches there is no installed context
+to invalidate — only the trainer's own executor cache keys on the mesh. A
+GSPMD entry point using ``sharding_context`` with ``replica_rules()`` must
+instead re-enter the context with the new mesh after a resize.
 """
 from __future__ import annotations
 

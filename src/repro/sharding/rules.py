@@ -50,6 +50,39 @@ def replica_mesh(n_replicas: int, devices=None) -> Mesh:
     return Mesh(np.asarray(devices[:n]), (REPLICA_AXIS,))
 
 
+class ReplicaMeshPool:
+    """Device pool for an *elastic* replica population (DESIGN.md §6).
+
+    A membership change (``ElasticTrainer.resize``) may need a replica mesh
+    of a different shard count — e.g. 4 replicas over 4 devices shrinking
+    to 2 replicas over 2. The pool owns the candidate device list and hands
+    out one mesh per shard count, returning the **same Mesh object** every
+    time a count recurs: the trainer keys its shard_map executor cache by
+    that mesh, so a resize back to a previously-seen population shape
+    rebuilds no executors and triggers no recompilation (the §6
+    zero-recompile contract). Shard counts are picked by
+    ``replica_mesh_size`` — the largest device count dividing R — so every
+    shard always owns an equal replica slice.
+    """
+
+    def __init__(self, devices=None):
+        self.devices = list(jax.devices() if devices is None else devices)
+        self._meshes: dict[int, Mesh] = {}
+
+    def mesh_for(self, n_replicas: int) -> Mesh:
+        n = replica_mesh_size(n_replicas, len(self.devices))
+        mesh = self._meshes.get(n)
+        if mesh is None:
+            mesh = Mesh(np.asarray(self.devices[:n]), (REPLICA_AXIS,))
+            self._meshes[n] = mesh
+        return mesh
+
+    def adopt(self, mesh: Mesh) -> None:
+        """Seed the pool with an externally built mesh (e.g. the trainer's
+        user-provided one) so that shard count reuses it verbatim."""
+        self._meshes[int(mesh.shape[REPLICA_AXIS])] = mesh
+
+
 def replica_spec(replica_dim: int = 0) -> P:
     """PartitionSpec sharding dimension ``replica_dim`` over REPLICA_AXIS.
 

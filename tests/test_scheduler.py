@@ -110,3 +110,27 @@ class TestSpeedModel:
     def test_single_replica_uniform(self):
         sm = SpeedModel(1)
         assert sm.factors[0] == 1.0
+
+    def test_long_drift_keeps_fastest_at_one(self):
+        """Regression: ``advance`` used to clip drifted factors to
+        ``[1, 1+2*max_gap]`` without renormalizing, so a random walk could
+        only ever slow replicas relative to the fastest and the whole fleet
+        monotonically inflated virtual time. Relative speeds are the
+        contract (heterogeneity.py docstring): the fastest factor must stay
+        pinned at 1.0 under arbitrarily long drift."""
+        sm = SpeedModel(4, max_gap=0.32, jitter=0.0, drift=0.05, seed=7)
+        for step in range(500):
+            sm.advance()
+            assert sm.factors.min() == 1.0, f"fleet inflated at step {step}"
+            assert sm.factors.max() <= 1.0 + 2 * sm.max_gap + 1e-12
+
+    def test_drift_gap_can_shrink_and_grow(self):
+        """With the renormalization the *relative* gap random-walks in both
+        directions instead of ratcheting up to the clip ceiling."""
+        sm = SpeedModel(4, max_gap=0.32, jitter=0.0, drift=0.05, seed=7)
+        gaps = []
+        for _ in range(300):
+            sm.advance()
+            gaps.append(sm.factors.max())
+        diffs = np.diff(gaps)
+        assert (diffs > 0).any() and (diffs < 0).any()

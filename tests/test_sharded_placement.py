@@ -135,6 +135,39 @@ def test_measured_speed_ignores_degenerate_samples():
     np.testing.assert_allclose(sm.factors, np.ones(2))
 
 
+def test_measured_speed_degenerate_plan_counts_window():
+    """Regression: a fully-masked mega-batch (``n_rounds == 0`` or all-zero
+    ``u``) used to fall into the unattributed whole-window branch (or a
+    division by the zero round count); it must charge no EMA but still
+    advance ``n_windows`` so the compile-warmup discard stays aligned with
+    the trainer's mega-batch sequence."""
+    sm = MeasuredSpeedModel(2, warmup_windows=0, timer=FakeTimer())
+    sm.observe_plan(np.array([100.0, 100.0]), 1.0, u=np.array([0, 0]),
+                    n_rounds=0)                       # nothing dispatched
+    assert sm.n_windows == 1
+    assert (sm.n_obs == 0).all()
+    np.testing.assert_allclose(sm.factors, np.ones(2))
+    sm.observe_plan(np.array([100.0, 100.0]), 1.0, u=np.array([0, 0]),
+                    n_rounds=3)                       # all-masked rounds
+    assert sm.n_windows == 2
+    assert (sm.n_obs == 0).all()
+    sm.observe_plan(np.array([100.0, 100.0]), 1.0, u=np.array([1, 1]),
+                    n_rounds=1)                       # healthy plan resumes
+    assert sm.n_windows == 3
+    assert (sm.n_obs == 1).all()
+
+
+def test_measured_speed_degenerate_plan_respects_warmup():
+    """The counted-but-unattributed window must consume a warmup slot like
+    any other window (alignment is the point of counting it)."""
+    sm = MeasuredSpeedModel(2, timer=FakeTimer())      # warmup_windows=1
+    sm.observe_plan(np.array([100.0, 100.0]), 60.0, u=np.array([0, 0]),
+                    n_rounds=0)                        # degenerate warmup
+    sm.observe_plan(np.array([100.0, 50.0]), 1.0, u=np.array([1, 1]),
+                    n_rounds=1)
+    assert (sm.n_obs == 1).all()                       # past warmup
+
+
 def test_measured_speed_drives_cost_model_and_scheduler():
     """The measured factors must steer the virtual clock: after observing a
     2x-slower replica, the availability-driven plan gives it fewer rounds."""

@@ -131,3 +131,38 @@ def test_metrics_log_contents(xml_data, model):
         assert key in rec
     assert len(rec["u"]) == 4
     assert abs(sum(rec["alphas"]) - 1.0) < 0.25  # perturbation may denormalize
+
+
+def test_evaluate_cache_tracks_swapped_test_set(xml_data, model):
+    """Regression: the staged-eval cache was keyed by list identity (PR 3),
+    so rebuilding or mutating the test list between calls served stale
+    device batches. The content fingerprint (length + first/last payload
+    ids) must restage when the set changes — including an in-place mutation
+    of the *same* list object — while repeated calls with the unchanged
+    set still hit the cache."""
+    ds, test = xml_data
+    prov = SparseProvider.make(ds)
+    cfg = ElasticConfig.from_bmax(64, algorithm="adaptive", n_replicas=2,
+                                  mega_batch=4)
+    tr = ElasticTrainer(model, prov, cfg, base_lr=0.5)
+    state = tr.init_state()
+    batches_a = prov.test_batches(test, cfg.b_max, max_samples=256)
+    batches_b = prov.test_batches(ds, cfg.b_max, max_samples=256)
+
+    ev_a = tr.evaluate(state.global_model, batches_a)
+    staged = tr._eval_batches
+    assert tr.evaluate(state.global_model, batches_a) == ev_a
+    assert tr._eval_batches is staged            # unchanged set: cache hit
+
+    # a different list object with different payloads restages
+    ev_b = tr.evaluate(state.global_model, batches_b)
+    assert tr._eval_batches is not staged
+    assert ev_b != ev_a                           # results track the new set
+
+    # mutating the SAME list object in place must also invalidate
+    shared = list(batches_b)
+    ev_shared = tr.evaluate(state.global_model, shared)
+    assert ev_shared == ev_b
+    shared[:] = batches_a
+    ev_swapped = tr.evaluate(state.global_model, shared)
+    assert ev_swapped == ev_a, "stale staged batches served after mutation"
