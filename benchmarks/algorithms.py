@@ -21,6 +21,14 @@ fixed-membership run; churn results default to
 Algorithms that clamp membership (``single``) follow their resize policy
 and run unchanged.
 
+The fixed-membership run also measures the *faults* scenario (DESIGN.md
+§7): the paper algorithm re-run under a seeded fault script — a NaN-poisoned
+replica healed by the trainer's non-finite guard, a crash evicted by the
+fleet controller with backoff readmission — with async checkpointing
+active. The headline is ``recovery_overhead`` = faulty TTA / clean TTA
+(lower is better, 1.0 = faults cost nothing); ``scripts/bench_check.py``
+gates it like any other headline metric.
+
   PYTHONPATH=src python -m benchmarks.algorithms
   PYTHONPATH=src python -m benchmarks.algorithms --megabatches 4   # CI smoke
   PYTHONPATH=src python -m benchmarks.algorithms \
@@ -31,6 +39,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import tempfile
 
 from repro.core import algorithms
 from repro.launch.train import parse_elastic_schedule
@@ -40,6 +49,48 @@ from .common import AMAZON, fmt, run_one, summarize
 # reachable by the averaging algorithms within the default budget on the
 # reduced-scale workload, so tta is a measured number, not a dash
 TARGET_ACC = 0.3
+
+
+def run_faults_scenario(args, clean: dict) -> dict:
+    """Re-run the paper algorithm under the seeded fault script with async
+    checkpointing on; headline = faulty TTA / clean TTA (lower is better).
+    Deterministic: virtual-clock timing + position-keyed fault draws."""
+    from repro.checkpoint.store import CheckpointManager
+    from repro.core.fleet import FleetController, parse_fault_spec
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        fleet = FleetController(
+            injector=parse_fault_spec(args.faults),
+            min_replicas=max(2, args.replicas // 2),
+            max_replicas=2 * args.replicas,
+        )
+        mlog = run_one(
+            AMAZON,
+            n_megabatches=args.megabatches,
+            algorithm="adaptive",
+            n_replicas=args.replicas,
+            engine=args.engine,
+            fleet=fleet,
+            checkpoint=CheckpointManager(ckpt_dir, every=5),
+        )
+    s = summarize(mlog, args.target)
+    overhead = (
+        s["tta"] / clean["tta"]
+        if s["tta"] is not None and clean and clean["tta"] else None
+    )
+    print(f"{'adaptive+faults':<14} {fmt(s['best_acc']):>9} "
+          f"{fmt(s['tta']):>9} {fmt(s['megabatches_to_target']):>9} "
+          f"{fmt(s['virtual_time']):>12}   "
+          f"recovery_overhead={fmt(overhead)} "
+          f"fleet_events={len(fleet.events)}")
+    return {
+        "spec": args.faults,
+        "fleet_events": len(fleet.events),
+        "clean_tta": clean["tta"] if clean else None,
+        "faulty_tta": s["tta"],
+        "faulty_best_acc": s["best_acc"],
+        "recovery_overhead": overhead,
+    }
 
 
 def main(argv=None):
@@ -53,6 +104,12 @@ def main(argv=None):
                          " benchmark under replica churn (DESIGN.md §6)."
                          " Default: fixed membership, matching the"
                          " committed baseline")
+    ap.add_argument("--faults", default="seed=11,3:nan:0,5:crash:1",
+                    help="seeded fault script for the recovery-overhead"
+                         " scenario (DESIGN.md §7); empty string skips it."
+                         " Only runs under fixed membership — the faults"
+                         " scenario IS a membership experiment, layering an"
+                         " elastic schedule on top would conflate the two")
     ap.add_argument("--out", default=None,
                     help="output json (default BENCH_algorithms.json, or"
                          " BENCH_algorithms_elastic.json under an elastic"
@@ -71,6 +128,7 @@ def main(argv=None):
         args.replicas = schedule[0]
 
     rows = []
+    clean_adaptive = None
     print(f"{'algorithm':<14} {'best_acc':>9} {'tta(vt)':>9} "
           f"{'mb_to_tgt':>9} {'virtual_time':>12}")
     for algo in algorithms.available():
@@ -85,9 +143,15 @@ def main(argv=None):
         s = summarize(mlog, args.target)
         row = {"algorithm": algo, **s}
         rows.append(row)
+        if algo == "adaptive":
+            clean_adaptive = s
         print(f"{algo:<14} {fmt(s['best_acc']):>9} {fmt(s['tta']):>9} "
               f"{fmt(s['megabatches_to_target']):>9} "
               f"{fmt(s['virtual_time']):>12}")
+
+    faults = None
+    if args.faults and schedule is None:
+        faults = run_faults_scenario(args, clean_adaptive)
 
     out = {
         "benchmark": "algorithms",
@@ -101,6 +165,7 @@ def main(argv=None):
             if schedule else None
         ),
         "rows": rows,
+        "faults": faults,
     }
     path = os.path.join(os.path.dirname(os.path.dirname(__file__)), args.out)
     with open(path, "w") as f:

@@ -104,13 +104,16 @@ def build_trainer(
 
 
 def run_one(w: Workload, n_megabatches: int = N_MEGABATCHES,
-            resize_schedule: dict[int, int] | None = None, **kw) -> MetricsLog:
+            resize_schedule: dict[int, int] | None = None,
+            fleet=None, checkpoint=None, **kw) -> MetricsLog:
     """``resize_schedule`` ({megabatch: R}, DESIGN.md §6) drives workers
     joining/leaving mid-benchmark; None = fixed membership (the committed
-    BENCH baselines)."""
+    BENCH baselines). ``fleet``/``checkpoint`` (DESIGN.md §7) run the
+    benchmark under fault injection / async checkpointing."""
     trainer, test_batches = build_trainer(w, **kw)
     _, mlog = trainer.run(n_megabatches, test_batches=test_batches,
-                          resize_schedule=resize_schedule)
+                          resize_schedule=resize_schedule,
+                          fleet=fleet, checkpoint=checkpoint)
     return mlog
 
 

@@ -12,7 +12,9 @@ Headline metrics per benchmark (higher is better unless noted):
 * ``BENCH_spmm_grad.json``   — every entry of ``speedup_sparse_over_dense``
 * ``BENCH_algorithms.json``  — per-algorithm ``tta`` (time-to-accuracy,
   LOWER is better; a fresh run that no longer reaches the target where the
-  baseline did is an automatic failure) and ``best_acc``
+  baseline did is an automatic failure), ``best_acc``, and the faults
+  scenario's ``recovery_overhead`` (faulty TTA / clean TTA, LOWER is
+  better, DESIGN.md §7)
 
 Baselines default to ``git show HEAD:<file>`` so the gate needs no extra
 artifact plumbing: the bench job regenerates the jsons in the workspace and
@@ -67,6 +69,15 @@ def headline_metrics(name: str, data: dict) -> dict[str, tuple[float | None, boo
             tta = row.get("tta")
             out[f"tta/{algo}"] = (None if tta is None else float(tta), False)
             out[f"best_acc/{algo}"] = (float(row["best_acc"]), True)
+        if data.get("faults"):
+            # fault-recovery scenario (DESIGN.md §7): faulty TTA / clean
+            # TTA under the seeded fault script — LOWER is better, and a
+            # fresh run whose faulty trajectory no longer reaches the
+            # target (recovery_overhead null) fails like a lost tta
+            ro = data["faults"].get("recovery_overhead")
+            out["faults/recovery_overhead"] = (
+                None if ro is None else float(ro), False
+            )
     else:
         raise KeyError(f"no headline extraction defined for {name}")
     return out

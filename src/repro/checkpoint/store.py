@@ -1,21 +1,51 @@
-"""Checkpointing: flat-path npz store for arbitrary pytrees + host metadata.
+"""Checkpointing: crash-consistent npz store + async CheckpointManager.
 
-Production notes: on a real pod each host writes its addressable shards
-(`save_sharded`); here (single host) that degenerates to a full save. The
-format is dependency-free: one .npz for tensors, one .json for metadata and
-treedef paths.
+Two layers (DESIGN.md §7):
+
+* ``save``/``load`` — the dependency-free single-checkpoint format: one
+  ``tensors.npz`` for the pytree leaves, one ``meta.json`` for metadata and
+  treedef paths. **Atomic publish**: both files are written into a hidden
+  temp sibling directory which is then ``os.replace``-d into place, so a
+  reader (or a restart after SIGKILL) either sees a complete checkpoint or
+  none at all — never ``meta.json`` next to a torn ``tensors.npz``. Load
+  failures raise :class:`CheckpointError` with the failing path/key instead
+  of a bare ``KeyError``/``FileNotFoundError``.
+* :class:`CheckpointManager` — periodic async snapshots of a running
+  trainer: every K mega-batches the state is materialized to host
+  synchronously (crash consistency: the snapshot is immutable before the
+  trainer mutates anything) and written by a background thread, with at
+  most one write in flight and bounded retention of published checkpoints.
+
+Production notes: on a real pod each host writes its addressable shards;
+here (single host) that degenerates to a full save.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Optional
+import shutil
+import tempfile
+import threading
+import zipfile
+from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 PyTree = Any
 SEP = "/"
+
+#: directory-name prefix of one published checkpoint (suffix = mega-batch
+#: index); everything else inside a manager directory is ignored by
+#: ``latest_checkpoint`` (in-flight ``.tmp-*`` dirs, stray files).
+CKPT_PREFIX = "ckpt-"
+
+
+class CheckpointError(Exception):
+    """A checkpoint could not be read: missing directory/file, a torn or
+    corrupt tensors archive, or a tree key absent from the store. The
+    message always names the offending path (and key, where applicable) so
+    a restore failure is actionable from the log alone."""
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -40,7 +70,18 @@ _SAFE_KINDS = "fiub?c"
 
 
 def save(path: str, tree: PyTree, metadata: Optional[dict] = None) -> None:
-    os.makedirs(path, exist_ok=True)
+    """Write one checkpoint directory atomically.
+
+    Both files are staged in a ``.tmp-*`` sibling and published with
+    ``os.replace`` — a crash mid-write leaves at most a stale temp dir
+    (cleaned opportunistically by :class:`CheckpointManager`), never a
+    directory with one good and one torn file. Overwriting an existing
+    ``path`` moves the old version aside first, so a crash during an
+    overwrite still leaves one complete checkpoint on disk.
+    """
+    path = os.path.abspath(path)
+    parent = os.path.dirname(path)
+    os.makedirs(parent, exist_ok=True)
     flat = _flatten(tree)
     dtypes = {}
     enc = {}
@@ -52,25 +93,65 @@ def save(path: str, tree: PyTree, metadata: Optional[dict] = None) -> None:
             ])
         else:
             enc[k] = arr
-    np.savez(os.path.join(path, "tensors.npz"), **enc)
     meta = dict(metadata or {})
     meta["_keys"] = sorted(flat.keys())
     meta["_dtypes"] = dtypes
-    with open(os.path.join(path, "meta.json"), "w") as f:
-        json.dump(meta, f, indent=1, default=float)
+
+    tmp = tempfile.mkdtemp(prefix=".tmp-" + os.path.basename(path) + "-",
+                           dir=parent)
+    try:
+        np.savez(os.path.join(tmp, "tensors.npz"), **enc)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f, indent=1, default=float)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.isdir(path):
+            # os.replace cannot clobber a non-empty dir: retire the old
+            # version first (it stays complete until the new one publishes)
+            old = tempfile.mkdtemp(prefix=".tmp-old-", dir=parent)
+            os.replace(path, os.path.join(old, "prev"))
+            os.replace(tmp, path)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.replace(tmp, path)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
 
 
 def load(path: str, like: PyTree) -> tuple[PyTree, dict]:
-    """Restore into the structure of ``like`` (shape/dtype checked)."""
-    data = np.load(os.path.join(path, "tensors.npz"))
-    with open(os.path.join(path, "meta.json")) as f:
-        meta = json.load(f)
+    """Restore into the structure of ``like`` (shape/dtype checked).
+
+    Raises :class:`CheckpointError` when the checkpoint directory or either
+    of its files is missing, the tensors archive is corrupt (torn write
+    from a pre-atomic producer), or a leaf of ``like`` has no stored
+    tensor. Shape mismatches still raise ``ValueError`` — the checkpoint
+    itself is fine, the receiving tree is wrong.
+    """
+    meta = load_metadata(path)
+    tensor_path = os.path.join(path, "tensors.npz")
+    try:
+        data = np.load(tensor_path)
+    except FileNotFoundError:
+        raise CheckpointError(
+            f"checkpoint {path} has no tensors.npz"
+        ) from None
+    except (zipfile.BadZipFile, OSError, ValueError) as e:
+        raise CheckpointError(
+            f"checkpoint tensors are corrupt (torn write?): {tensor_path}: {e}"
+        ) from e
     paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     stored_dtypes = meta.get("_dtypes", {})
     leaves = []
     for p, leaf in paths:
         key = SEP.join(_key_str(x) for x in p)
-        arr = data[key]
+        try:
+            arr = data[key]
+        except KeyError:
+            raise CheckpointError(
+                f"checkpoint {path} is missing tensor {key!r} "
+                f"(stored keys: {len(meta.get('_keys', []))})"
+            ) from None
         if key in stored_dtypes:
             arr = arr.view(np.dtype(stored_dtypes[key]))
         if tuple(arr.shape) != tuple(np.shape(leaf)):
@@ -80,5 +161,186 @@ def load(path: str, like: PyTree) -> tuple[PyTree, dict]:
 
 
 def load_metadata(path: str) -> dict:
-    with open(os.path.join(path, "meta.json")) as f:
-        return json.load(f)
+    meta_path = os.path.join(path, "meta.json")
+    try:
+        with open(meta_path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        raise CheckpointError(
+            f"no checkpoint at {path} (missing {meta_path})"
+        ) from None
+    except json.JSONDecodeError as e:
+        raise CheckpointError(
+            f"checkpoint metadata is corrupt: {meta_path}: {e}"
+        ) from e
+
+
+# --------------------------------------------------------------------------
+# manager: periodic async snapshots with retention
+# --------------------------------------------------------------------------
+
+
+def checkpoint_index(name: str) -> Optional[int]:
+    """Mega-batch index of a published checkpoint dir name, else None."""
+    if not name.startswith(CKPT_PREFIX):
+        return None
+    try:
+        return int(name[len(CKPT_PREFIX):])
+    except ValueError:
+        return None
+
+
+def latest_checkpoint(directory: str) -> Optional[str]:
+    """Path of the newest *complete* checkpoint under ``directory``.
+
+    Atomic publish means a listed ``ckpt-*`` dir is complete iff its
+    ``meta.json`` exists (both files land in one rename); in-flight
+    ``.tmp-*`` staging dirs are never candidates. Returns None when the
+    directory is missing or holds no checkpoint.
+    """
+    try:
+        names = os.listdir(directory)
+    except FileNotFoundError:
+        return None
+    best, best_idx = None, -1
+    for name in names:
+        idx = checkpoint_index(name)
+        if idx is None or idx <= best_idx:
+            continue
+        if os.path.isfile(os.path.join(directory, name, "meta.json")):
+            best, best_idx = os.path.join(directory, name), idx
+    return best
+
+
+def resolve_checkpoint(path: str) -> str:
+    """Accept either one checkpoint dir or a manager directory (-> latest)."""
+    if os.path.isfile(os.path.join(path, "meta.json")):
+        return path
+    latest = latest_checkpoint(path)
+    if latest is None:
+        raise CheckpointError(f"no checkpoint found under {path}")
+    return latest
+
+
+class CheckpointManager:
+    """Periodic crash-consistent snapshots of a running ``ElasticTrainer``.
+
+    ``maybe_save(trainer, state)`` is called once per mega-batch (the
+    trainer's ``run`` loop does this when a manager is passed); every
+    ``every``-th mega-batch it
+
+    1. **snapshots synchronously** — ``trainer.checkpoint_payload(state)``
+       is materialized to host numpy *before* returning, so the copy can
+       never observe a later mega-batch half-applied (the trainer mutates
+       scheduler clocks / speed EMAs in place);
+    2. **writes asynchronously** — a single background thread runs the
+       atomic :func:`save` + retention sweep while training continues. At
+       most one write is in flight (a new snapshot first joins the
+       previous write, bounding host memory to two snapshots);
+    3. **retains boundedly** — after each publish, all but the newest
+       ``retain`` checkpoints (and any stale ``.tmp-*`` staging dirs) are
+       deleted. The just-published checkpoint is never a deletion
+       candidate, so the directory always holds at least one complete
+       checkpoint once the first publish lands.
+
+    A writer-thread failure is re-raised on the next ``maybe_save``/
+    ``wait`` call — checkpointing errors must fail the run, not vanish
+    into a daemon thread.
+    """
+
+    def __init__(self, directory: str, every: int = 1, retain: int = 3,
+                 async_write: bool = True):
+        if every < 1:
+            raise ValueError(f"checkpoint interval must be >= 1, got {every}")
+        if retain < 1:
+            raise ValueError(f"checkpoint retention must be >= 1, got {retain}")
+        self.directory = os.path.abspath(directory)
+        self.every = int(every)
+        self.retain = int(retain)
+        self.async_write = bool(async_write)
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+        self._last_saved: Optional[int] = None
+
+    # ---- saving ----
+    def step_path(self, megabatch_idx: int) -> str:
+        return os.path.join(self.directory, f"{CKPT_PREFIX}{megabatch_idx:06d}")
+
+    def maybe_save(self, trainer, state, force: bool = False) -> Optional[str]:
+        """Snapshot ``state`` if it sits on the checkpoint interval.
+
+        Returns the (future) checkpoint path when a save was scheduled,
+        else None. ``state.megabatch_idx`` keys the interval — the trainer
+        calls this after each mega-batch, so index k means "k mega-batches
+        completed"."""
+        idx = int(state.megabatch_idx)
+        if not force and (idx % self.every != 0 or idx == self._last_saved
+                          or idx == 0):
+            return None
+        self._reraise()
+        tree, meta = trainer.checkpoint_payload(state)
+        # host-materialize NOW: np.array copies device buffers and the
+        # trainer's mutable host arrays (b/lr/clock) alike, so the write
+        # job owns an immutable snapshot
+        snapshot = jax.tree_util.tree_map(lambda l: np.array(l), tree)
+        path = self.step_path(idx)
+        self._last_saved = idx
+        if self.async_write:
+            self.wait()           # <= one write in flight
+            self._thread = threading.Thread(
+                target=self._write_job, args=(path, snapshot, meta),
+                name="checkpoint-writer", daemon=True,
+            )
+            self._thread.start()
+        else:
+            self._write_job(path, snapshot, meta)
+            self._reraise()
+        return path
+
+    def _write_job(self, path: str, snapshot, meta: dict) -> None:
+        try:
+            save(path, snapshot, metadata=meta)
+            self._sweep_retention(keep_path=path)
+        except BaseException as e:  # surfaced on the next host-thread call
+            self._error = e
+
+    def wait(self) -> None:
+        """Block until the in-flight write (if any) has published."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._reraise()
+
+    def _reraise(self) -> None:
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(f"background checkpoint write failed: {err}") from err
+
+    def _sweep_retention(self, keep_path: str) -> None:
+        entries = []
+        for name in os.listdir(self.directory):
+            full = os.path.join(self.directory, name)
+            if name.startswith(".tmp-") and full != keep_path:
+                shutil.rmtree(full, ignore_errors=True)  # stale staging dir
+                continue
+            idx = checkpoint_index(name)
+            if idx is not None and full != keep_path:
+                entries.append((idx, full))
+        entries.sort(reverse=True)
+        for _, full in entries[self.retain - 1:]:  # keep_path counts as one
+            shutil.rmtree(full, ignore_errors=True)
+
+    # ---- restoring ----
+    def latest(self) -> Optional[str]:
+        return latest_checkpoint(self.directory)
+
+    def restore(self, trainer, path: Optional[str] = None):
+        """Restore an ``ElasticState`` into ``trainer`` from ``path`` (or
+        the newest checkpoint under this manager's directory)."""
+        if path is None:
+            path = self.latest()
+            if path is None:
+                raise CheckpointError(
+                    f"no checkpoint found under {self.directory}"
+                )
+        return trainer.restore_checkpoint(path)

@@ -1,0 +1,370 @@
+"""Fleet controller + deterministic fault injection (DESIGN.md §7).
+
+PR 5 made replica membership *elastic* (``ElasticTrainer.resize``); this
+module makes it *reactive*. Between mega-batches the trainer hands control
+to a :class:`FleetController`, which consumes an event queue of
+:class:`FaultEvent`s — replica crashes, preemption notices, join requests,
+transient stalls, NaN poisoning — and turns them into targeted membership
+changes (``trainer.remove_replicas`` / ``trainer.resize``), quarantine
+bookkeeping with exponential-backoff readmission, and health-based
+eviction of replicas whose relative speed blows past a timeout factor.
+
+Fault model (DESIGN.md §7):
+
+* ``crash`` — the replica is gone *without* notice: its in-flight updates
+  are excluded from the final merge (``remove_replicas(...,
+  merge_leavers=False)`` zeroes its rows and redistributes its Alg.-2
+  merge weight over the survivors), and the worker enters quarantine with
+  exponential-backoff readmission.
+* ``preempt`` — the replica got notice (spot/preemptible semantics): its
+  updates fold into the final normalized merge like any graceful leaver,
+  and it auto-rejoins after its announced absence.
+* ``join`` — capacity appears: ``resize(R + 1)`` (the joiner clones the
+  merged global with zero momentum, DESIGN.md §6).
+* ``stall`` — a transient slowdown: the simulated speed factor is
+  multiplied by ``severity`` for ``duration`` mega-batches. No membership
+  change by itself — but the health detector may evict the straggler if
+  the slowdown exceeds the timeout factor, which is exactly the
+  quarantine layer's job (Ma & Rusu: a silently degraded worker poisons
+  update quality if it keeps contributing at full weight).
+* ``nan`` — a replica's parameters are poisoned with NaN. Detection and
+  repair are the *trainer's* job (``guard_nonfinite``): the poisoned rows
+  are excluded from the merge and re-cloned from the finite donor; the
+  controller only injects the fault.
+
+Every failure path is reproducible: the :class:`FaultInjector` draws its
+probabilistic events from ``np.random.default_rng((seed, mega_batch))`` —
+keyed by position, not draw history — and scripted schedules fire at exact
+mega-batch indices, so tests, the chaos CI job, and the faults benchmark
+replay identical event sequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.heterogeneity import SpeedModel
+from repro.utils import tree as tu
+from repro.utils.logging import log
+
+FAULT_KINDS = ("crash", "preempt", "join", "stall", "nan")
+
+
+@dataclass(frozen=True)
+class FaultEvent:
+    """One fault at a mega-batch boundary.
+
+    ``replica`` — target slot; None lets the consumer pick (scripted
+    events default to the tail slot, probabilistic draws pick uniformly).
+    ``duration`` — mega-batches of absence (preempt) / slowdown (stall).
+    ``severity`` — stall slowdown multiplier on the simulated speed factor.
+    """
+
+    kind: str
+    replica: Optional[int] = None
+    duration: int = 2
+    severity: float = 4.0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; one of {FAULT_KINDS}"
+            )
+        if self.duration < 1:
+            raise ValueError(f"fault duration must be >= 1, got {self.duration}")
+
+
+@dataclass
+class FaultInjector:
+    """Deterministic fault source: scripted schedule + seeded coin flips.
+
+    ``schedule`` maps a mega-batch index to the events that fire before it;
+    the ``p_*`` rates add at most one probabilistic event of each kind per
+    boundary. Draws are keyed by ``(seed, mega_batch)`` alone, so the event
+    at mega-batch 17 is the same whether or not earlier faults fired (and
+    identical after a checkpoint restore).
+    """
+
+    seed: int = 0
+    p_crash: float = 0.0
+    p_preempt: float = 0.0
+    p_join: float = 0.0
+    p_stall: float = 0.0
+    p_nan: float = 0.0
+    schedule: dict[int, tuple[FaultEvent, ...]] = field(default_factory=dict)
+
+    def events_for(self, mb: int, n_replicas: int) -> list[FaultEvent]:
+        events = list(self.schedule.get(int(mb), ()))
+        rates = (
+            ("crash", self.p_crash), ("preempt", self.p_preempt),
+            ("join", self.p_join), ("stall", self.p_stall),
+            ("nan", self.p_nan),
+        )
+        if any(p > 0 for _, p in rates):
+            rng = np.random.default_rng((self.seed, int(mb)))
+            for kind, p in rates:
+                # one draw per kind per boundary, unconditionally: the
+                # event stream must not depend on which faults fired
+                hit = rng.random() < p
+                target = int(rng.integers(max(n_replicas, 1)))
+                if p > 0 and hit:
+                    events.append(
+                        FaultEvent(
+                            kind, None if kind == "join" else target
+                        )
+                    )
+        return events
+
+
+def parse_fault_spec(spec: str) -> FaultInjector:
+    """Parse the launcher's ``--faults`` string.
+
+    Comma-separated tokens, two shapes::
+
+        seed=7,p_crash=0.02,p_join=0.05     injector parameters
+        3:crash:1,5:join,7:nan:0,9:stall:2:4  MB:kind[:replica[:duration]]
+
+    A scripted event's replica may be omitted (consumer picks the tail
+    slot). Unknown parameters, kinds, or negative indices fail fast.
+    """
+    kwargs: dict = {}
+    schedule: dict[int, list[FaultEvent]] = {}
+    rate_keys = ("p_crash", "p_preempt", "p_join", "p_stall", "p_nan")
+    for token in spec.split(","):
+        token = token.strip()
+        if not token:
+            continue
+        if "=" in token:
+            key, _, value = token.partition("=")
+            key = key.strip()
+            if key == "seed":
+                kwargs["seed"] = int(value)
+            elif key in rate_keys:
+                kwargs[key] = float(value)
+            else:
+                raise ValueError(
+                    f"unknown fault parameter {key!r} in --faults {spec!r}"
+                )
+            continue
+        parts = token.split(":")
+        if len(parts) < 2:
+            raise ValueError(
+                f"bad fault token {token!r} (want MB:kind[:replica[:dur]])"
+            )
+        mb = int(parts[0])
+        if mb < 0:
+            raise ValueError(f"fault token {token!r} has negative mega-batch")
+        replica = (
+            int(parts[2]) if len(parts) > 2 and parts[2] != "" else None
+        )
+        duration = int(parts[3]) if len(parts) > 3 else 2
+        schedule.setdefault(mb, []).append(
+            FaultEvent(parts[1], replica, duration)
+        )
+    return FaultInjector(
+        schedule={k: tuple(v) for k, v in schedule.items()}, **kwargs
+    )
+
+
+@dataclass
+class _Quarantined:
+    """One absent worker awaiting readmission."""
+
+    rejoin_at: int      # mega-batch index when readmission is due
+    level: int = 0      # backoff escalation level (crashes only)
+    graceful: bool = False
+
+
+@dataclass
+class FleetController:
+    """Reactive membership driver, called by ``ElasticTrainer.run`` as
+    ``state = fleet.step(trainer, state, mb)`` at each mega-batch boundary.
+
+    Order of business per tick: expire stalls → readmit quarantined
+    workers whose backoff elapsed → apply injected fault events → evict
+    unhealthy stragglers. Membership always stays within
+    ``[min_replicas, max_replicas]``; algorithms with
+    ``resize_policy='fixed'`` keep their population (membership events are
+    logged as skipped; NaN injection still fires — the trainer's guard
+    handles it without a resize).
+
+    Health detection: a replica whose relative speed factor exceeds
+    ``timeout_factor``× the population median is treated as preempted
+    (graceful eviction — its updates are sound, just late) and re-admitted
+    after backoff. Feed it a ``MeasuredSpeedModel`` and this is real
+    straggler detection; with the simulated model it reacts to injected
+    stalls. ``timeout_factor=0`` disables the detector.
+
+    Quarantine: readmission delay is ``backoff * 2**level`` mega-batches
+    (capped at ``backoff_cap``); a crash within ``probation`` mega-batches
+    of the last readmission escalates the level, so a flapping worker is
+    kept out for exponentially longer.
+
+    Every action lands in ``self.events`` (list of dicts with mega-batch,
+    action, replica slot) — the chaos tests and the faults benchmark
+    assert against this log.
+    """
+
+    injector: Optional[FaultInjector] = None
+    min_replicas: int = 1
+    max_replicas: Optional[int] = None
+    timeout_factor: float = 0.0
+    backoff: int = 2
+    backoff_cap: int = 16
+    probation: int = 4
+    verbose: bool = False
+    events: list = field(default_factory=list)
+    _quarantine: list = field(default_factory=list)
+    _stalls: dict = field(default_factory=dict)  # slot -> [expire_mb, mult]
+    _last_rejoin_mb: Optional[int] = None
+    _last_level: int = 0
+
+    # ------------------------------------------------------------------
+    def step(self, trainer, state, mb: int):
+        elastic = getattr(trainer.algo, "resize_policy", "merge") != "fixed"
+
+        # 1. transient stalls that ran their course
+        for slot, (expire, mult) in sorted(self._stalls.items()):
+            if mb >= expire:
+                if slot < trainer.cfg.n_replicas and isinstance(
+                    trainer.speed, SpeedModel
+                ):
+                    trainer.speed.factors[slot] /= mult
+                del self._stalls[slot]
+                self._log(mb, "stall_recovered", slot)
+
+        # 2. quarantined workers whose backoff elapsed
+        for q in [q for q in self._quarantine if q.rejoin_at <= mb]:
+            cap = self.max_replicas or np.inf
+            if not elastic or trainer.cfg.n_replicas >= cap:
+                continue  # stays queued until there is room
+            state = trainer.resize(state, trainer.cfg.n_replicas + 1)
+            self._quarantine.remove(q)
+            self._last_rejoin_mb, self._last_level = mb, q.level
+            self._log(
+                mb, "rejoin", trainer.cfg.n_replicas - 1, level=q.level
+            )
+
+        # 3. injected fault events
+        if self.injector is not None:
+            for ev in self.injector.events_for(mb, trainer.cfg.n_replicas):
+                state = self._apply_event(trainer, state, mb, ev)
+
+        # 4. health: evict the straggler if it blew the timeout factor
+        if (
+            self.timeout_factor > 0
+            and elastic
+            and trainer.cfg.n_replicas > self.min_replicas
+        ):
+            factors = np.asarray(trainer.speed.factors, np.float64)
+            worst = int(np.argmax(factors))
+            median = float(np.median(factors))
+            if factors[worst] > self.timeout_factor * max(median, 1e-12):
+                state = self._evict(
+                    trainer, state, mb, worst, graceful=True,
+                    reason="timeout",
+                )
+        return state
+
+    # ------------------------------------------------------------------
+    def _apply_event(self, trainer, state, mb: int, ev: FaultEvent):
+        R = trainer.cfg.n_replicas
+        elastic = getattr(trainer.algo, "resize_policy", "merge") != "fixed"
+        slot = ev.replica if ev.replica is not None else R - 1
+        if ev.kind != "join" and not 0 <= slot < R:
+            self._log(mb, f"{ev.kind}_skipped", slot, reason="no such slot")
+            return state
+
+        if ev.kind == "join":
+            cap = self.max_replicas or np.inf
+            if not elastic:
+                self._log(mb, "join_skipped", None, reason="fixed membership")
+            elif R >= cap:
+                self._log(mb, "join_skipped", None, reason="at max_replicas")
+            else:
+                state = trainer.resize(state, R + 1)
+                self._log(mb, "join", R)
+            return state
+
+        if ev.kind in ("crash", "preempt"):
+            if not elastic:
+                self._log(
+                    mb, f"{ev.kind}_skipped", slot, reason="fixed membership"
+                )
+            elif R <= self.min_replicas:
+                self._log(
+                    mb, f"{ev.kind}_skipped", slot, reason="at min_replicas"
+                )
+            else:
+                state = self._evict(
+                    trainer, state, mb, slot,
+                    graceful=(ev.kind == "preempt"),
+                    reason=ev.kind,
+                    rejoin_in=ev.duration if ev.kind == "preempt" else None,
+                )
+            return state
+
+        if ev.kind == "stall":
+            if isinstance(trainer.speed, SpeedModel) and slot not in self._stalls:
+                trainer.speed.factors[slot] *= ev.severity
+                self._stalls[slot] = [mb + ev.duration, ev.severity]
+                self._log(
+                    mb, "stall", slot, duration=ev.duration,
+                    severity=ev.severity,
+                )
+            else:
+                # measured speeds: a real stall shows up in the EMAs and is
+                # the health detector's business, nothing to simulate
+                self._log(mb, "stall_skipped", slot, reason="not simulated")
+            return state
+
+        # 'nan': poison the slot's parameters; the trainer's non-finite
+        # guard must exclude it from the merge and heal it
+        poisoned = tu.tree_map(
+            lambda l: l.at[slot].set(jnp.asarray(jnp.nan, l.dtype)),
+            state.replicas,
+        )
+        self._log(mb, "nan", slot)
+        return dataclasses.replace(state, replicas=poisoned)
+
+    def _evict(self, trainer, state, mb, slot, graceful, reason,
+               rejoin_in=None):
+        level = 0
+        if not graceful and self._last_rejoin_mb is not None and (
+            mb - self._last_rejoin_mb <= self.probation
+        ):
+            level = self._last_level + 1
+        if rejoin_in is None:
+            rejoin_in = min(self.backoff * (2 ** level), self.backoff_cap)
+        state = trainer.remove_replicas(
+            state, [slot], merge_leavers=graceful
+        )
+        # survivor slots above the evicted one shift down by one
+        self._stalls = {
+            (s - 1 if s > slot else s): v
+            for s, v in self._stalls.items()
+            if s != slot
+        }
+        self._quarantine.append(
+            _Quarantined(
+                rejoin_at=mb + max(1, int(rejoin_in)),
+                level=level,
+                graceful=graceful,
+            )
+        )
+        self._log(
+            mb, "evict", slot, reason=reason, graceful=graceful,
+            level=level, rejoin_in=int(rejoin_in),
+        )
+        return state
+
+    def _log(self, mb: int, action: str, slot, **extra) -> None:
+        entry = {"mb": int(mb), "action": action, "replica": slot, **extra}
+        self.events.append(entry)
+        if self.verbose:
+            log(f"[fleet] mb={mb}", **{k: v for k, v in entry.items()
+                                       if k != "mb"})

@@ -84,6 +84,28 @@ class SpeedModel:
         self.factors = factors / factors.min()
         self.n_replicas = new_R
 
+    def permute(self, perm) -> None:
+        """Reorder replica slots (DESIGN.md §7: targeted eviction moves the
+        evicted slot to the tail before a shrink). Pure relabeling — no
+        renormalization, the factor set is unchanged."""
+        self.factors = self.factors[np.asarray(perm, np.int64)]
+
+    # ---- checkpointing (DESIGN.md §7) ----
+    def state_dict(self) -> dict:
+        """Full restorable state: factor arrays plus the jitter/drift RNG
+        (``arrays`` -> tensor store, ``meta`` -> json metadata), so a
+        restored run replays the same simulated heterogeneity trajectory."""
+        return {
+            "arrays": {"factors": self.factors.copy()},
+            "meta": {"kind": "simulated",
+                     "rng": self._rng.bit_generator.state},
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        self.factors = np.asarray(sd["arrays"]["factors"], np.float64).copy()
+        self.n_replicas = len(self.factors)
+        self._rng.bit_generator.state = sd["meta"]["rng"]
+
 
 @dataclass
 class MeasuredSpeedModel:
@@ -258,6 +280,36 @@ class MeasuredSpeedModel:
         self._factors = None
         self.discard_next_window()
 
+    def permute(self, perm) -> None:
+        """Reorder replica slots (targeted eviction, DESIGN.md §7): the
+        EMAs and observation counts follow their replica."""
+        perm = np.asarray(perm, np.int64)
+        self.t_per_work = self.t_per_work[perm]
+        self.n_obs = self.n_obs[perm]
+        self._factors = None
+
+    # ---- checkpointing (DESIGN.md §7) ----
+    def state_dict(self) -> dict:
+        """EMAs, observation counts and the warmup/skip counters — enough
+        that a restored run keeps attributing windows exactly where the
+        killed run left off (the trainer additionally discards the first
+        post-restore window: a fresh process recompiles inside it)."""
+        return {
+            "arrays": {"t_per_work": self.t_per_work.copy(),
+                       "n_obs": self.n_obs.copy()},
+            "meta": {"kind": "measured", "n_windows": int(self.n_windows),
+                     "skip_windows": int(self.skip_windows)},
+        }
+
+    def load_state_dict(self, sd: dict) -> None:
+        self.t_per_work = np.asarray(sd["arrays"]["t_per_work"],
+                                     np.float64).copy()
+        self.n_obs = np.asarray(sd["arrays"]["n_obs"], np.int64).copy()
+        self.n_replicas = len(self.n_obs)
+        self.n_windows = int(sd["meta"]["n_windows"])
+        self.skip_windows = int(sd["meta"]["skip_windows"])
+        self._factors = None
+
 
 @dataclass
 class CostModel:
@@ -304,6 +356,10 @@ class VirtualClock:
         t[:keep] = self.t[:keep]
         self.t = t
         self.n_replicas = new_R
+
+    def permute(self, perm) -> None:
+        """Reorder replica timelines (targeted eviction, DESIGN.md §7)."""
+        self.t = self.t[np.asarray(perm, np.int64)]
 
     def advance(self, i: int, dt: float) -> None:
         self.t[i] += dt

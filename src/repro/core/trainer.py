@@ -116,6 +116,9 @@ class ElasticTrainer:
     sparse_grads: bool = True        # use the model's row-sparse grad path if
                                      # it provides one; False = dense autodiff
                                      # (the differential oracle, DESIGN.md §3)
+    guard_nonfinite: bool = True     # quarantine NaN/Inf replicas before the
+                                     # merge (DESIGN.md §7); numerically inert
+                                     # while every replica stays finite
     mesh: Optional[Mesh] = None      # replica mesh for cfg.placement='sharded'
                                      # (None = build one over the local devices)
     seed: int = 0
@@ -312,6 +315,21 @@ class ElasticTrainer:
             self._bodies = (round_body, megabatch_fn, merge_fn, donate)
             self._install_sharded_executors()
         self._eval = jax.jit(loss_fn)
+
+        def finite_rows(tree):
+            """(R,) bool: replica i's leaves are all finite. Read-only — the
+            non-finite guard's detection pass never perturbs the numerics of
+            a healthy mega-batch (golden bit-identity)."""
+            parts = [
+                jnp.all(
+                    jnp.isfinite(l.astype(jnp.float32)),
+                    axis=tuple(range(1, l.ndim)),
+                )
+                for l in jax.tree_util.tree_leaves(tree)
+            ]
+            return jnp.all(jnp.stack(parts, 0), axis=0)
+
+        self._finite_rows = jax.jit(finite_rows)
 
     def _install_sharded_executors(self):
         """Bind (or re-bind, after a resize) the engine entry points to the
@@ -568,25 +586,12 @@ class ElasticTrainer:
         new_b, new_lr = self.algo.resize_b(
             new_cfg, state.b, state.lr, self.base_lr
         )
-        self.cfg = new_cfg
-        self.speed.resize(new_R)
-        self.scheduler.resize(new_cfg)
+        self._adopt_width(new_R)
 
         # ---- re-shard: new replica mesh + cached executors ----
-        if self.cfg.placement == "sharded":
-            self.mesh = self._mesh_pool.mesh_for(new_R)
-            self._install_sharded_executors()
-            shard0 = NamedSharding(self.mesh, replica_spec(0))
-            repl = NamedSharding(self.mesh, P())
-            put0 = lambda l: jax.device_put(l, shard0)  # noqa: E731
-            putr = lambda l: jax.device_put(l, repl)  # noqa: E731
-            new_replicas = tu.tree_map(put0, new_replicas)
-            if new_momentum is not None:
-                new_momentum = tu.tree_map(put0, new_momentum)
-            if new_global is not None:
-                new_global = tu.tree_map(putr, new_global)
-            if new_prev is not None:
-                new_prev = tu.tree_map(putr, new_prev)
+        new_replicas, new_momentum, new_global, new_prev = self._place_state(
+            new_replicas, new_momentum, new_global, new_prev
+        )
 
         return ElasticState(
             replicas=new_replicas,
@@ -597,6 +602,101 @@ class ElasticTrainer:
             lr=np.asarray(new_lr, np.float64),
             megabatch_idx=state.megabatch_idx,
         )
+
+    def _adopt_width(self, new_R: int) -> None:
+        """Adopt a new replica count: config, speed model, scheduler, and —
+        under the sharded placement — the replica mesh + cached executors.
+        The population-agnostic half of ``resize``, reused by
+        ``restore_checkpoint`` when the checkpointed width differs from the
+        trainer's construction width."""
+        self.cfg = dataclasses.replace(self.cfg, n_replicas=new_R)
+        self.speed.resize(new_R)
+        self.scheduler.resize(self.cfg)
+        if self.cfg.placement == "sharded":
+            self.mesh = self._mesh_pool.mesh_for(new_R)
+            self._install_sharded_executors()
+
+    def _place_state(self, replicas, momentum, global_model, prev_global):
+        """device_put the state trees onto the current replica mesh
+        (identity under the vmap placement)."""
+        if self.cfg.placement != "sharded":
+            return replicas, momentum, global_model, prev_global
+        shard0 = NamedSharding(self.mesh, replica_spec(0))
+        repl = NamedSharding(self.mesh, P())
+        put0 = lambda l: jax.device_put(l, shard0)  # noqa: E731
+        putr = lambda l: jax.device_put(l, repl)  # noqa: E731
+        replicas = tu.tree_map(put0, replicas)
+        if momentum is not None:
+            momentum = tu.tree_map(put0, momentum)
+        if global_model is not None:
+            global_model = tu.tree_map(putr, global_model)
+        if prev_global is not None:
+            prev_global = tu.tree_map(putr, prev_global)
+        return replicas, momentum, global_model, prev_global
+
+    def remove_replicas(
+        self, state: ElasticState, indices, merge_leavers: bool = True
+    ) -> ElasticState:
+        """Evict specific replica slots between mega-batches (DESIGN.md §7).
+
+        ``resize`` only drops *tail* rows, so targeted eviction first
+        permutes survivors to the front (every per-replica array — state
+        rows, b/lr, speed factors/EMAs, virtual clocks — moves with its
+        replica), then shrinks.
+
+        ``merge_leavers`` encodes the fault semantics: a *preempted*
+        replica got notice, so its updates fold into the final normalized
+        merge like any graceful leaver (True); a *crashed or poisoned*
+        replica must be excluded — its rows are zeroed and its merge weight
+        set to 0, so Algorithm 2's normalization redistributes b_i over the
+        survivors and a NaN payload can never reach the weighted sum
+        (0 * NaN is NaN, hence the explicit zeroing).
+        """
+        R = self.cfg.n_replicas
+        drop = sorted({int(i) for i in indices})
+        if not drop:
+            return state
+        bad = [i for i in drop if i < 0 or i >= R]
+        if bad:
+            raise ValueError(f"replica indices {bad} out of range for R={R}")
+        if len(drop) >= R:
+            raise ValueError(
+                f"cannot remove all {R} replicas (removal of {drop})"
+            )
+        survivors = [i for i in range(R) if i not in set(drop)]
+        perm = survivors + drop
+
+        if perm != list(range(R)):
+            p = jnp.asarray(perm)
+            take = lambda l: jnp.take(l, p, axis=0)  # noqa: E731
+            state = ElasticState(
+                replicas=tu.tree_map(take, state.replicas),
+                global_model=state.global_model,
+                prev_global=state.prev_global,
+                momentum=(
+                    tu.tree_map(take, state.momentum)
+                    if state.momentum is not None else None
+                ),
+                b=np.asarray(state.b, np.float64)[perm],
+                lr=np.asarray(state.lr, np.float64)[perm],
+                megabatch_idx=state.megabatch_idx,
+            )
+            self.speed.permute(perm)
+            self.scheduler.clock.permute(perm)
+
+        if not merge_leavers:
+            keep = R - len(drop)
+            mask = jnp.arange(R) < keep
+            zero_tail = lambda l: jnp.where(  # noqa: E731
+                mask.reshape((-1,) + (1,) * (l.ndim - 1)), l, jnp.zeros_like(l)
+            )
+            b = np.asarray(state.b, np.float64).copy()
+            b[keep:] = 0.0
+            state = dataclasses.replace(
+                state, replicas=tu.tree_map(zero_tail, state.replicas), b=b
+            )
+
+        return self.resize(state, R - len(drop))
 
     # ------------------------------------------------------------------
     # round execution engines
@@ -692,6 +792,20 @@ class ElasticTrainer:
                 u=plan.u, n_rounds=plan.n_rounds,
             )
 
+        # ---- non-finite guard (DESIGN.md §7) ----
+        # A replica whose params went NaN/Inf during the rounds is healed
+        # *before* the barrier so it can never poison the merged global.
+        # Detection is read-only: a healthy mega-batch is bit-identical
+        # with the guard on or off.
+        guard_repaired: list[int] = []
+        if self.guard_nonfinite:
+            finite = np.asarray(self._finite_rows(replicas))
+            if not finite.all():
+                replicas, momentum = self._repair_nonfinite(
+                    state, replicas, momentum, finite
+                )
+                guard_repaired = np.flatnonzero(~finite).tolist()
+
         # ---- merge (the barrier) + between-mega-batch adaptation ----
         outcome = self.algo.merge(self, state, plan, replicas)
         new_b, new_lr = self.algo.adapt(state, plan, cfg)
@@ -727,7 +841,61 @@ class ElasticTrainer:
             "virtual_time": virtual_time,
             "n_rounds": plan.n_rounds,
         }
+        if guard_repaired:
+            info["guard_repaired"] = guard_repaired
         return new_state, info
+
+    def _repair_nonfinite(self, state, replicas, momentum, finite):
+        """Re-clone non-finite replicas from a finite donor (DESIGN.md §7).
+
+        The poisoned rows are zeroed first — a zero merge weight alone is
+        not enough, ``0 * NaN`` is still NaN — then overwritten with the
+        donor: the Algorithm-2 normalized merge of the *finite* rows
+        (weights ``b_i`` restricted to them, so the poisoned replicas'
+        weight is redistributed by the normalization). Since the donor
+        carries exactly the survivors' relative weights, the algorithm's
+        subsequent barrier merge over the repaired population equals the
+        merge that would have excluded the poisoned rows outright. A fully
+        diverged population (the sync family averages gradients *across*
+        replicas each round, so one NaN reaches every row within the
+        mega-batch) restarts from the last barrier global instead; an
+        algorithm that keeps no global copy cannot recover and raises.
+        Healed replicas continue with zeroed momentum and their b/lr
+        untouched (Algorithm 1 adapts them onward as usual).
+        """
+        mask = jnp.asarray(finite)
+
+        def keep_rows(l, fill):
+            m = mask.reshape((-1,) + (1,) * (l.ndim - 1))
+            return jnp.where(m, l, fill)
+
+        replicas = tu.tree_map(
+            lambda l: keep_rows(l, jnp.zeros_like(l)), replicas
+        )
+        if finite.any():
+            alphas = np.where(finite, np.asarray(state.b, np.float64), 0.0)
+            donor, _ = self.merge_models(
+                replicas, alphas / alphas.sum(), None, None, 0.0
+            )
+        elif state.global_model is not None:
+            donor = state.global_model
+        else:
+            raise FloatingPointError(
+                "all replicas diverged to non-finite values and algorithm "
+                f"{self.algo.name!r} keeps no global model to restart from"
+            )
+        replicas = tu.tree_map(
+            lambda l, g: keep_rows(
+                l, jnp.broadcast_to(g[None].astype(l.dtype), l.shape)
+            ),
+            replicas,
+            donor,
+        )
+        if momentum is not None:
+            momentum = tu.tree_map(
+                lambda l: keep_rows(l, jnp.zeros_like(l)), momentum
+            )
+        return replicas, momentum
 
     # ------------------------------------------------------------------
     # evaluation + full run
@@ -785,6 +953,166 @@ class ElasticTrainer:
             "loss": tot_loss / max(tot_n, 1.0),
         }
 
+    # ------------------------------------------------------------------
+    # crash-consistent checkpointing (DESIGN.md §7)
+    # ------------------------------------------------------------------
+    def checkpoint_payload(self, state: ElasticState) -> tuple[dict, dict]:
+        """Everything a restored run needs to continue the exact
+        trajectory: ``(tensor_tree, json_metadata)`` for
+        ``checkpoint.store.save``. Tensors cover the model state (replicas,
+        globals, momentum), the per-replica b/lr, the scheduler's virtual
+        clocks, and the speed model's arrays; metadata carries the
+        mega-batch index, population width, algorithm name, the speed
+        model's counters/RNG, and the data provider's stream cursor + RNG.
+        """
+        speed_sd = self.speed.state_dict()
+        tree = {
+            "replicas": state.replicas,
+            "momentum": state.momentum,
+            "global_model": state.global_model,
+            "prev_global": state.prev_global,
+            "b": np.asarray(state.b, np.float64),
+            "lr": np.asarray(state.lr, np.float64),
+            "clock_t": np.asarray(self.scheduler.clock.t, np.float64),
+            "speed": speed_sd["arrays"],
+        }
+        metadata = {
+            "format": 1,
+            "megabatch_idx": int(state.megabatch_idx),
+            "n_replicas": int(self.cfg.n_replicas),
+            "algorithm": self.cfg.algorithm,
+            "seed": int(self.seed),
+            "has": {
+                "momentum": state.momentum is not None,
+                "global_model": state.global_model is not None,
+                "prev_global": state.prev_global is not None,
+            },
+            "speed_meta": speed_sd["meta"],
+        }
+        if hasattr(self.provider, "state_dict"):
+            metadata["provider"] = self.provider.state_dict()
+        return tree, metadata
+
+    def restore_checkpoint(self, path: str) -> ElasticState:
+        """Rebuild the full training state from an atomic checkpoint.
+
+        ``path`` is one checkpoint directory or a manager directory (the
+        newest complete checkpoint is taken). The trainer must be
+        constructed with the same model/algorithm/config family as the
+        writer — structural mismatches raise
+        :class:`repro.checkpoint.store.CheckpointError` — but its
+        construction-time replica count may differ: the checkpointed width
+        is adopted (``_adopt_width``), exactly like a resize to it.
+        """
+        from repro.checkpoint import store as ckpt_store
+
+        path = ckpt_store.resolve_checkpoint(path)
+        meta = ckpt_store.load_metadata(path)
+        if meta.get("algorithm") != self.cfg.algorithm:
+            raise ckpt_store.CheckpointError(
+                f"checkpoint {path} was written by algorithm "
+                f"{meta.get('algorithm')!r}; this trainer runs "
+                f"{self.cfg.algorithm!r}"
+            )
+        new_R = int(meta["n_replicas"])
+        if new_R != self.cfg.n_replicas:
+            self._adopt_width(new_R)
+        speed_sd = self.speed.state_dict()
+        ckpt_kind = meta.get("speed_meta", {}).get("kind")
+        if ckpt_kind != speed_sd["meta"]["kind"]:
+            raise ckpt_store.CheckpointError(
+                f"checkpoint {path} carries a {ckpt_kind!r} speed model; "
+                f"this trainer uses {speed_sd['meta']['kind']!r}"
+            )
+        ref = self.init_state()
+        has = meta.get("has", {})
+        if bool(has.get("momentum")) != (ref.momentum is not None):
+            raise ckpt_store.CheckpointError(
+                f"checkpoint {path} "
+                f"{'has' if has.get('momentum') else 'lacks'} momentum but "
+                "this trainer's SGD config disagrees"
+            )
+        # global/prev presence follows the *checkpoint*, not init_state:
+        # algorithms without Alg.-2 global copies still publish a global
+        # model from their first barrier onward (MergeOutcome.global_model)
+        params_like = tu.tree_replica_slice(ref.replicas, 0)
+        like = {
+            "replicas": ref.replicas,
+            "momentum": ref.momentum,
+            "global_model": params_like if has.get("global_model") else None,
+            "prev_global": params_like if has.get("prev_global") else None,
+            "b": np.zeros(new_R, np.float64),
+            "lr": np.zeros(new_R, np.float64),
+            "clock_t": np.zeros(new_R, np.float64),
+            "speed": speed_sd["arrays"],
+        }
+        tree, _ = ckpt_store.load(path, like)
+        self.scheduler.clock.t[:] = np.asarray(tree["clock_t"], np.float64)
+        self.speed.load_state_dict(
+            {"arrays": tree["speed"], "meta": meta["speed_meta"]}
+        )
+        if isinstance(self.speed, MeasuredSpeedModel):
+            # the fresh process jit-compiles inside the first timed window
+            self.speed.discard_next_window()
+        if "provider" in meta and hasattr(self.provider, "load_state_dict"):
+            self.provider.load_state_dict(meta["provider"])
+        replicas, momentum, global_model, prev_global = self._place_state(
+            tree["replicas"], tree["momentum"],
+            tree["global_model"], tree["prev_global"],
+        )
+        return ElasticState(
+            replicas=replicas,
+            global_model=global_model,
+            prev_global=prev_global,
+            momentum=momentum,
+            b=np.asarray(tree["b"], np.float64),
+            lr=np.asarray(tree["lr"], np.float64),
+            megabatch_idx=int(meta["megabatch_idx"]),
+        )
+
+    def _validate_resize_schedule(
+        self, resize_schedule: dict
+    ) -> dict[int, int]:
+        """Normalize + validate a resize schedule at launch (DESIGN.md §6).
+
+        Rejects negative mega-batch indices, entries that collide after int
+        normalization (``{"3": 4, 3: 6}``), and replica targets the
+        algorithm's resize_policy would refuse 40 mega-batches in — a bad
+        ``--elastic-schedule`` must fail before training starts.
+        """
+        out: dict[int, int] = {}
+        policy = getattr(self.algo, "resize_policy", "merge")
+        for raw_mb, raw_R in resize_schedule.items():
+            mb, target = int(raw_mb), int(raw_R)
+            if mb != float(raw_mb) or target != float(raw_R):
+                raise ValueError(
+                    f"resize schedule entry {raw_mb!r}: {raw_R!r} is not "
+                    "an integer pair"
+                )
+            if mb < 0:
+                raise ValueError(
+                    f"resize schedule has negative mega-batch index {mb}"
+                )
+            if mb in out:
+                raise ValueError(
+                    f"resize schedule defines mega-batch {mb} twice "
+                    "(duplicate after normalization)"
+                )
+            resolved = int(self.algo.resolve_n_replicas(target))
+            if resolved < 1:
+                raise ValueError(
+                    f"resize schedule targets {target} replicas at "
+                    f"mega-batch {mb}"
+                )
+            if policy == "fixed" and resolved != self.cfg.n_replicas:
+                raise ValueError(
+                    f"algorithm {self.algo.name!r} pins its replica "
+                    f"membership (resize_policy='fixed'); schedule entry "
+                    f"{mb}: {target} is invalid"
+                )
+            out[mb] = target
+        return out
+
     def run(
         self,
         n_megabatches: int,
@@ -792,6 +1120,9 @@ class ElasticTrainer:
         eval_every: int = 1,
         verbose: bool = False,
         resize_schedule: Optional[dict[int, int]] = None,
+        fleet: Optional[Any] = None,
+        checkpoint: Optional[Any] = None,
+        restore_from: Optional[str] = None,
     ) -> tuple[ElasticState, MetricsLog]:
         """Train ``n_megabatches`` mega-batches.
 
@@ -800,15 +1131,37 @@ class ElasticTrainer:
         launcher's ``--elastic-schedule "0:4,20:6,40:3"``): workers join or
         leave at those boundaries via ``resize``. An entry matching the
         current R is a no-op, so a constant schedule reproduces the
-        unscheduled run bit-for-bit.
+        unscheduled run bit-for-bit. Schedules are validated up front.
+
+        ``fleet`` — a ``core.fleet.FleetController``: reactive membership.
+        Its ``step(trainer, state, mb)`` runs at each boundary (after any
+        scheduled resize), consuming fault events and health signals.
+
+        ``checkpoint`` — a ``checkpoint.store.CheckpointManager``: after
+        every mega-batch ``maybe_save`` snapshots on its interval; the
+        final in-flight write is joined before returning.
+
+        ``restore_from`` — checkpoint path (or manager directory): resume
+        from it instead of ``init_state``. Training continues at the
+        checkpointed mega-batch index; metrics of earlier mega-batches
+        belong to the previous process's log.
         """
-        state = self.init_state()
+        if resize_schedule is not None:
+            resize_schedule = self._validate_resize_schedule(resize_schedule)
+        if restore_from is not None:
+            state = self.restore_checkpoint(restore_from)
+        else:
+            state = self.init_state()
         mlog = MetricsLog()
         t0 = time.perf_counter()
-        for mb in range(n_megabatches):
+        for mb in range(int(state.megabatch_idx), n_megabatches):
             if resize_schedule is not None and mb in resize_schedule:
                 state = self.resize(state, resize_schedule[mb])
+            if fleet is not None:
+                state = fleet.step(self, state, mb)
             state, info = self.run_megabatch(state)
+            if checkpoint is not None:
+                checkpoint.maybe_save(self, state)
             if test_batches is not None and (mb + 1) % eval_every == 0:
                 ev = self.evaluate(state.global_model, test_batches)
                 info.update(accuracy=ev["accuracy"], test_loss=ev["loss"])
@@ -824,4 +1177,6 @@ class ElasticTrainer:
                     b=info["b"],
                     vt=round(info["virtual_time"], 3),
                 )
+        if checkpoint is not None:
+            checkpoint.wait()
         return state, mlog

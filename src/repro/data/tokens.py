@@ -45,6 +45,16 @@ class TokenStream:
             "sample_mask": mask,
         }
 
+    # ---- checkpointing (DESIGN.md §7) ----
+    def state_dict(self) -> dict:
+        """RNG state only: the bigram table is deterministic in the seed and
+        rebuilt by construction, so a restored stream continues the exact
+        token sequence of the killed run."""
+        return {"rng": self.rng.bit_generator.state}
+
+    def load_state_dict(self, sd: dict) -> None:
+        self.rng.bit_generator.state = sd["rng"]
+
 
 def stack_token_batches(batches: list[dict]) -> dict:
     return {k: np.stack([b[k] for b in batches]) for k in batches[0]}

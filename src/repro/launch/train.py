@@ -27,6 +27,13 @@ Examples:
       --reduced --algorithm adaptive --megabatches 5
   PYTHONPATH=src python -m repro.launch.train --workload xml \
       --algorithm adaptive --megabatches 60 --elastic-schedule "0:4,20:6,40:3"
+  PYTHONPATH=src python -m repro.launch.train --workload xml \
+      --algorithm adaptive --megabatches 30 \
+      --faults "seed=7,p_crash=0.05,3:nan:0,5:join" \
+      --checkpoint-dir /tmp/run1 --checkpoint-every 5
+  PYTHONPATH=src python -m repro.launch.train --workload xml \
+      --algorithm adaptive --megabatches 30 \
+      --checkpoint-dir /tmp/run1 --restore-from /tmp/run1
 """
 from __future__ import annotations
 
@@ -144,6 +151,35 @@ def main(argv=None):
                          " §6). An entry at 0 overrides --replicas; the"
                          " trainer re-plans, re-shards and carries momentum"
                          " at each boundary")
+    ap.add_argument("--faults", default="",
+                    help="fault-injection spec (DESIGN.md §7): comma list of"
+                         " injector rates (seed=7,p_crash=0.02,...) and"
+                         " scripted events 'MB:kind[:replica[:duration]]'"
+                         " with kind in crash|preempt|join|stall|nan, e.g."
+                         " 'seed=7,3:crash:1,5:join,7:nan:0'. Runs the"
+                         " trainer under a FleetController (reactive"
+                         " resize + quarantine)")
+    ap.add_argument("--min-replicas", type=int, default=1,
+                    help="fleet floor: evictions never shrink below this")
+    ap.add_argument("--max-replicas", type=int, default=0,
+                    help="fleet ceiling for joins/readmissions (0 = 2x the"
+                         " initial replica count)")
+    ap.add_argument("--timeout-factor", type=float, default=0.0,
+                    help="health detector: evict a replica whose relative"
+                         " speed exceeds this multiple of the population"
+                         " median (0 disables)")
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="enable crash-consistent async checkpointing into"
+                         " this directory (atomic publish, bounded"
+                         " retention)")
+    ap.add_argument("--checkpoint-every", type=int, default=5,
+                    help="mega-batches between checkpoints")
+    ap.add_argument("--checkpoint-retain", type=int, default=3,
+                    help="published checkpoints kept on disk")
+    ap.add_argument("--restore-from", default="",
+                    help="resume from this checkpoint (a ckpt-* directory,"
+                         " or a checkpoint dir — the newest complete"
+                         " checkpoint is used)")
     ap.add_argument("--megabatches", type=int, default=10)
     ap.add_argument("--mega-batch", type=int, default=20,
                     help="batches per mega-batch (paper default 100)")
@@ -201,15 +237,38 @@ def main(argv=None):
         sgd=SGDConfig(), base_lr=args.lr, speed=speed, seed=args.seed,
         engine=args.engine, sparse_grads=not args.dense_grads, mesh=mesh,
     )
+    fleet = None
+    if args.faults or args.timeout_factor > 0:
+        from repro.core.fleet import FleetController, parse_fault_spec
+
+        fleet = FleetController(
+            injector=parse_fault_spec(args.faults) if args.faults else None,
+            min_replicas=args.min_replicas,
+            max_replicas=args.max_replicas or 2 * ecfg.n_replicas,
+            timeout_factor=args.timeout_factor,
+            verbose=True,
+        )
+    manager = None
+    if args.checkpoint_dir:
+        from repro.checkpoint.store import CheckpointManager
+
+        manager = CheckpointManager(
+            args.checkpoint_dir, every=args.checkpoint_every,
+            retain=args.checkpoint_retain,
+        )
     state, mlog = trainer.run(
         args.megabatches, test_batches=test_batches, verbose=True,
-        resize_schedule=schedule,
+        resize_schedule=schedule, fleet=fleet, checkpoint=manager,
+        restore_from=args.restore_from or None,
     )
     final = mlog.records[-1] if mlog.records else {}
     log("final",
         algorithm=args.algorithm,
         accuracy=round(final.get("accuracy", float("nan")), 4),
         virtual_time=round(final.get("virtual_time", float("nan")), 3))
+    if fleet is not None:
+        log("fleet", events=len(fleet.events),
+            replicas=trainer.cfg.n_replicas)
     if args.out:
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:

@@ -1,0 +1,128 @@
+"""Kill-and-restore chaos test (DESIGN.md §7 acceptance).
+
+Runs the real launcher (``python -m repro.launch.train``) as a subprocess
+with async checkpointing on, SIGKILLs it as soon as the first complete
+checkpoint is published, restarts with ``--restore-from``, and checks:
+
+* the restart resumes exactly one mega-batch after the newest *complete*
+  checkpoint (at most one checkpoint interval of work is lost),
+* the post-restore loss trajectory matches an uninterrupted reference run
+  (CPU runs are deterministic; restore must be trajectory-equivalent).
+"""
+from __future__ import annotations
+
+import os
+import re
+import signal
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+EVERY = 2
+MEGABATCHES = 12
+
+LOSS_RE = re.compile(r"\[repro\] \[adaptive\] mb=(\d+) loss=([^ ]+)")
+
+
+def _base_cmd():
+    return [
+        sys.executable, "-u", "-m", "repro.launch.train",
+        "--workload", "xml", "--samples", "1024", "--features", "256",
+        "--classes", "64", "--hidden", "32", "--b-max", "32",
+        "--mega-batch", "6", "--replicas", "3", "--algorithm", "adaptive",
+        "--megabatches", str(MEGABATCHES), "--seed", "0",
+    ]
+
+
+def _env():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), env.get("PYTHONPATH", "")]
+    )
+    return env
+
+
+def _losses(stderr: str) -> dict[int, float]:
+    return {
+        int(m.group(1)): float(m.group(2))
+        for m in LOSS_RE.finditer(stderr)
+    }
+
+
+def _complete_checkpoints(ckpt_dir) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("ckpt-") and os.path.exists(
+            os.path.join(ckpt_dir, name, "meta.json")
+        ):
+            out.append(int(name.split("-")[1]))
+    return sorted(out)
+
+
+@pytest.mark.slow
+def test_sigkill_and_restore_matches_uninterrupted_run(tmp_path):
+    ckpt_dir = str(tmp_path / "ckpt")
+    env = _env()
+
+    # 1. uninterrupted reference trajectory
+    ref = subprocess.run(
+        _base_cmd(), capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert ref.returncode == 0, ref.stderr[-4000:]
+    ref_losses = _losses(ref.stderr)
+    assert sorted(ref_losses) == list(range(1, MEGABATCHES + 1))
+
+    # 2. same run with async checkpointing; SIGKILL (no cleanup, no atexit)
+    # the instant the first complete checkpoint is published
+    victim = subprocess.Popen(
+        _base_cmd() + ["--checkpoint-dir", ckpt_dir,
+                       "--checkpoint-every", str(EVERY)],
+        stdout=subprocess.PIPE, stderr=subprocess.PIPE, text=True, env=env,
+    )
+    deadline = time.monotonic() + 300
+    while not _complete_checkpoints(ckpt_dir):
+        if victim.poll() is not None:
+            _, err = victim.communicate()
+            pytest.fail(f"victim exited before checkpointing:\n{err[-4000:]}")
+        if time.monotonic() > deadline:
+            victim.kill()
+            pytest.fail("no checkpoint published within 300s")
+        time.sleep(0.05)
+    victim.send_signal(signal.SIGKILL)
+    _, victim_err = victim.communicate()
+    assert victim.returncode == -signal.SIGKILL
+
+    published = _complete_checkpoints(ckpt_dir)
+    latest = published[-1]
+    victim_done = max(_losses(victim_err), default=0)
+    # crash consistency: whatever survived is a complete checkpoint, and at
+    # most the interval being written on top of the current one is lost
+    assert latest >= 1
+    assert victim_done - latest <= 2 * EVERY
+
+    # 3. restore and finish the run
+    resumed = subprocess.run(
+        _base_cmd() + ["--checkpoint-dir", ckpt_dir,
+                       "--checkpoint-every", str(EVERY),
+                       "--restore-from", ckpt_dir],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert resumed.returncode == 0, resumed.stderr[-4000:]
+    res_losses = _losses(resumed.stderr)
+
+    # resumes exactly one mega-batch after the newest complete checkpoint
+    assert sorted(res_losses) == list(range(latest + 1, MEGABATCHES + 1))
+
+    # trajectory equivalence with the uninterrupted run
+    mbs = sorted(res_losses)
+    np.testing.assert_allclose(
+        [res_losses[mb] for mb in mbs],
+        [ref_losses[mb] for mb in mbs],
+        rtol=1e-4, atol=1e-6,
+    )

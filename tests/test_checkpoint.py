@@ -1,12 +1,18 @@
 """Checkpoint store roundtrip + trainer-state integration."""
 from __future__ import annotations
 
+import os
+import sys
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.checkpoint import store
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+from generate import build_case_trainer, make_case_dataset  # noqa: E402
 
 
 def test_roundtrip_pytree(tmp_path):
@@ -44,3 +50,224 @@ def test_model_params_roundtrip(tmp_path):
     l0 = jax.tree_util.tree_leaves(params)[0]
     r0 = jax.tree_util.tree_leaves(restored)[0]
     np.testing.assert_array_equal(np.asarray(l0), np.asarray(r0))
+
+
+# --------------------------------------------------------------------------
+# atomicity + error taxonomy (DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+
+def test_crash_mid_write_leaves_no_partial_checkpoint(tmp_path, monkeypatch):
+    """A writer dying inside np.savez must never publish a directory."""
+    def boom(*a, **k):
+        raise RuntimeError("disk died")
+
+    monkeypatch.setattr(store.np, "savez", boom)
+    with pytest.raises(RuntimeError, match="disk died"):
+        store.save(str(tmp_path / "c"), {"w": jnp.zeros(3)})
+    assert not (tmp_path / "c").exists()
+    # staging temp dir is cleaned up on the failure path too
+    assert [p for p in tmp_path.iterdir()] == []
+
+
+def test_crash_mid_overwrite_keeps_old_checkpoint(tmp_path, monkeypatch):
+    path = str(tmp_path / "c")
+    store.save(path, {"w": jnp.zeros(3)}, metadata={"v": 1})
+    real_savez = store.np.savez
+    monkeypatch.setattr(
+        store.np, "savez",
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("torn")),
+    )
+    with pytest.raises(RuntimeError):
+        store.save(path, {"w": jnp.ones(3)}, metadata={"v": 2})
+    monkeypatch.setattr(store.np, "savez", real_savez)
+    restored, meta = store.load(path, {"w": jnp.zeros(3)})
+    assert meta["v"] == 1  # the old complete checkpoint survived intact
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.zeros(3))
+
+
+def test_load_missing_checkpoint_raises_checkpoint_error(tmp_path):
+    with pytest.raises(store.CheckpointError, match="no checkpoint"):
+        store.load(str(tmp_path / "nope"), {"w": jnp.zeros(2)})
+
+
+def test_load_corrupt_tensors_raises_checkpoint_error(tmp_path):
+    path = str(tmp_path / "c")
+    store.save(path, {"w": jnp.zeros(2)})
+    with open(os.path.join(path, "tensors.npz"), "wb") as f:
+        f.write(b"torn write, not a zip")
+    with pytest.raises(store.CheckpointError, match="corrupt"):
+        store.load(path, {"w": jnp.zeros(2)})
+
+
+def test_load_missing_key_raises_checkpoint_error(tmp_path):
+    path = str(tmp_path / "c")
+    store.save(path, {"w": jnp.zeros(2)})
+    with pytest.raises(store.CheckpointError, match="extra"):
+        store.load(path, {"w": jnp.zeros(2), "extra": jnp.zeros(1)})
+
+
+def test_latest_checkpoint_ignores_incomplete_and_tmp(tmp_path):
+    store.save(str(tmp_path / "ckpt-000002"), {"w": jnp.zeros(1)})
+    store.save(str(tmp_path / "ckpt-000004"), {"w": jnp.zeros(1)})
+    # a higher-index dir without meta.json (torn pre-atomic write) loses
+    os.makedirs(tmp_path / "ckpt-000006")
+    os.makedirs(tmp_path / ".tmp-ckpt-000008-x")
+    assert store.latest_checkpoint(str(tmp_path)).endswith("ckpt-000004")
+    assert store.resolve_checkpoint(str(tmp_path)).endswith("ckpt-000004")
+    with pytest.raises(store.CheckpointError):
+        store.resolve_checkpoint(str(tmp_path / "empty"))
+
+
+# --------------------------------------------------------------------------
+# CheckpointManager
+# --------------------------------------------------------------------------
+
+
+class _FakeTrainer:
+    def checkpoint_payload(self, state):
+        return {"x": state["x"]}, {"megabatch_idx": int(state["idx"])}
+
+
+def _fake_state(idx):
+    return {"x": np.full(3, float(idx)), "idx": idx}
+
+
+class _DictState(dict):
+    @property
+    def megabatch_idx(self):
+        return self["idx"]
+
+
+def test_manager_interval_and_retention(tmp_path):
+    mgr = store.CheckpointManager(str(tmp_path), every=2, retain=2,
+                                  async_write=False)
+    tr = _FakeTrainer()
+    for idx in range(1, 9):
+        mgr.maybe_save(tr, _DictState(_fake_state(idx)))
+    names = sorted(
+        n for n in os.listdir(tmp_path) if n.startswith(store.CKPT_PREFIX)
+    )
+    assert names == ["ckpt-000006", "ckpt-000008"]  # retention swept 2,4
+    assert mgr.latest().endswith("ckpt-000008")
+
+
+def test_manager_snapshot_is_immutable(tmp_path):
+    """The host snapshot must be copied before the trainer mutates state."""
+    mgr = store.CheckpointManager(str(tmp_path), every=1, async_write=True)
+    tr = _FakeTrainer()
+    state = _DictState(_fake_state(3))
+    mgr.maybe_save(tr, state)
+    state["x"][:] = -1.0  # trainer mutating in place after the snapshot
+    mgr.wait()
+    restored, _ = store.load(mgr.latest(), {"x": np.zeros(3)})
+    np.testing.assert_array_equal(restored["x"], np.full(3, 3.0))
+
+
+def test_manager_background_failure_surfaces(tmp_path, monkeypatch):
+    mgr = store.CheckpointManager(str(tmp_path), every=1, async_write=True)
+    monkeypatch.setattr(
+        store, "save",
+        lambda *a, **k: (_ for _ in ()).throw(RuntimeError("writer died")),
+    )
+    mgr.maybe_save(_FakeTrainer(), _DictState(_fake_state(1)))
+    with pytest.raises(store.CheckpointError, match="writer died"):
+        mgr.wait()
+
+
+def test_manager_validates_args(tmp_path):
+    with pytest.raises(ValueError):
+        store.CheckpointManager(str(tmp_path), every=0)
+    with pytest.raises(ValueError):
+        store.CheckpointManager(str(tmp_path), retain=0)
+
+
+# --------------------------------------------------------------------------
+# full ElasticState round-trip + restore equivalence (DESIGN.md §7)
+# --------------------------------------------------------------------------
+
+
+def test_full_elastic_state_roundtrip(tmp_path):
+    """Params (ml_dtypes leaves included), momentum, b/lr, clocks, speed
+    model, provider cursor: everything in checkpoint_payload survives."""
+    ds = make_case_dataset()
+    tr = build_case_trainer("adaptive", "scan", True, ds)
+    state = tr.init_state()
+    for _ in range(2):
+        state, _ = tr.run_megabatch(state)
+    tree, meta = tr.checkpoint_payload(state)
+    path = str(tmp_path / "full")
+    store.save(path, tree, metadata=meta)
+
+    tr2 = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    restored = tr2.restore_checkpoint(path)
+    assert restored.megabatch_idx == 2
+    np.testing.assert_array_equal(restored.b, state.b)
+    np.testing.assert_array_equal(restored.lr, state.lr)
+    np.testing.assert_array_equal(tr2.scheduler.clock.t, tr.scheduler.clock.t)
+    np.testing.assert_array_equal(tr2.speed.factors, tr.speed.factors)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state.replicas),
+        jax.tree_util.tree_leaves(restored.replicas),
+    ):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(state.momentum),
+        jax.tree_util.tree_leaves(restored.momentum),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # provider stream cursor continues where the writer stopped
+    assert tr2.provider.state_dict() == tr.provider.state_dict()
+
+
+def test_restore_checkpoint_rejects_mismatches(tmp_path):
+    ds = make_case_dataset()
+    tr = build_case_trainer("adaptive", "scan", True, ds)
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state)
+    tree, meta = tr.checkpoint_payload(state)
+    path = str(tmp_path / "c")
+    store.save(path, tree, metadata=meta)
+    other = build_case_trainer("elastic", "scan", True, make_case_dataset())
+    with pytest.raises(store.CheckpointError, match="algorithm"):
+        other.restore_checkpoint(path)
+
+
+@pytest.mark.parametrize("algo", sorted(
+    __import__("repro.core.algorithms", fromlist=["available"]).available()
+))
+def test_restore_equivalence(tmp_path, algo):
+    """train N straight == train k -> checkpoint -> restore (fresh trainer,
+    fresh process semantics) -> train N-k, for every registered algorithm."""
+    N, K = 4, 2
+    ds = make_case_dataset()
+
+    straight = build_case_trainer(algo, "scan", True, ds)
+    s_state, s_log = straight.run(N)
+
+    split = build_case_trainer(algo, "scan", True, make_case_dataset())
+    mgr = store.CheckpointManager(str(tmp_path / algo), every=K,
+                                  async_write=False)
+    split.run(K, checkpoint=mgr)
+    assert mgr.latest() is not None
+
+    resumed = build_case_trainer(algo, "scan", True, make_case_dataset())
+    r_state, r_log = resumed.run(N, restore_from=str(tmp_path / algo))
+
+    s_losses = [rec["train_loss"] for rec in s_log.records]
+    r_losses = [rec["train_loss"] for rec in r_log.records]
+    assert len(r_losses) == N - K
+    np.testing.assert_allclose(r_losses, s_losses[K:], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(r_state.b), np.asarray(s_state.b), rtol=1e-12
+    )
+    ref = s_state.global_model
+    got = r_state.global_model
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref), jax.tree_util.tree_leaves(got)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float64), np.asarray(b, np.float64),
+            rtol=1e-4, atol=1e-6,
+        )

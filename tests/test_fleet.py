@@ -1,0 +1,344 @@
+"""Fault injection, targeted eviction, quarantine, and the non-finite
+guard (DESIGN.md §7)."""
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fleet import (
+    FaultEvent,
+    FaultInjector,
+    FleetController,
+    parse_fault_spec,
+)
+from repro.utils import tree as tu
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+from generate import build_case_trainer, make_case_dataset  # noqa: E402
+
+
+def leaves_np(tree):
+    return [np.asarray(l) for l in jax.tree_util.tree_leaves(tree)]
+
+
+def tree_finite(tree) -> bool:
+    return all(np.isfinite(l).all() for l in leaves_np(tree))
+
+
+def poison_row(state, slot):
+    import dataclasses
+
+    return dataclasses.replace(
+        state,
+        replicas=tu.tree_map(
+            lambda l: l.at[slot].set(jnp.asarray(jnp.nan, l.dtype)),
+            state.replicas,
+        ),
+    )
+
+
+# --------------------------------------------------------------------------
+# spec parsing + injector determinism
+# --------------------------------------------------------------------------
+
+
+def test_parse_fault_spec():
+    inj = parse_fault_spec("seed=7,p_crash=0.25,3:crash:1,5:join,7:nan:0,9:stall:2:4")
+    assert inj.seed == 7 and inj.p_crash == 0.25
+    assert inj.schedule[3] == (FaultEvent("crash", 1),)
+    assert inj.schedule[5][0].kind == "join"
+    assert inj.schedule[5][0].replica is None
+    assert inj.schedule[9][0].duration == 4
+
+
+@pytest.mark.parametrize("bad", [
+    "p_bogus=1", "x:crash", "3:meteor", "-1:crash:0", "3", "3:crash:0:0",
+])
+def test_parse_fault_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_fault_spec(bad)
+
+
+def test_injector_deterministic_and_history_free():
+    inj = FaultInjector(seed=3, p_crash=0.5, p_join=0.5)
+    seq = [tuple((e.kind, e.replica) for e in inj.events_for(mb, 4))
+           for mb in range(20)]
+    # same injector, replayed: identical (no draw-history dependence)
+    again = [tuple((e.kind, e.replica) for e in inj.events_for(mb, 4))
+             for mb in range(20)]
+    assert seq == again
+    # querying out of order must not change any event
+    shuffled = {mb: tuple((e.kind, e.replica) for e in inj.events_for(mb, 4))
+                for mb in reversed(range(20))}
+    assert [shuffled[mb] for mb in range(20)] == seq
+    assert any(seq)  # p=0.5 over 20 boundaries: events actually fire
+
+
+def test_injector_schedule_and_rates_compose():
+    inj = FaultInjector(seed=0, p_crash=1.0,
+                        schedule={2: (FaultEvent("join"),)})
+    kinds = [e.kind for e in inj.events_for(2, 4)]
+    assert kinds[0] == "join" and "crash" in kinds
+
+
+# --------------------------------------------------------------------------
+# targeted eviction: remove_replicas permutation semantics
+# --------------------------------------------------------------------------
+
+
+def test_remove_replicas_permutes_per_replica_state():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    state = tr.init_state()
+    state.b[:] = [10.0, 20.0, 30.0, 40.0]
+    state.lr[:] = [0.1, 0.2, 0.3, 0.4]
+    tr.speed.factors[:] = [1.0, 1.1, 1.2, 1.3]
+    tr.scheduler.clock.t[:] = [5.0, 6.0, 7.0, 8.0]
+
+    state = tr.remove_replicas(state, [1], merge_leavers=True)
+
+    assert tr.cfg.n_replicas == 3
+    np.testing.assert_array_equal(state.b, [10.0, 30.0, 40.0])
+    np.testing.assert_array_equal(state.lr, [0.1, 0.3, 0.4])
+    # factors renormalize to fastest==1.0 after the shrink (resize contract)
+    np.testing.assert_allclose(tr.speed.factors, [1.0, 1.2, 1.3])
+    np.testing.assert_array_equal(tr.scheduler.clock.t, [5.0, 7.0, 8.0])
+    assert all(l.shape[0] == 3 for l in leaves_np(state.replicas))
+
+
+def test_remove_replicas_validates():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    state = tr.init_state()
+    with pytest.raises(ValueError, match="out of range"):
+        tr.remove_replicas(state, [7])
+    with pytest.raises(ValueError, match="all"):
+        tr.remove_replicas(state, [0, 1, 2, 3])
+    assert tr.remove_replicas(state, []) is state
+
+
+def test_remove_replicas_excludes_crashed_from_merge():
+    """merge_leavers=False: a NaN-poisoned leaver must not touch the merged
+    global (its Alg.-2 weight is redistributed; rows zeroed before the sum)."""
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state)
+    state = poison_row(state, 2)
+    state = tr.remove_replicas(state, [2], merge_leavers=False)
+    assert tr.cfg.n_replicas == 3
+    assert tree_finite(state.replicas)
+    assert tree_finite(state.global_model)
+
+
+def test_remove_replicas_graceful_matches_tail_resize():
+    """Evicting the tail slot with merge is exactly resize(R-1)."""
+    ds = make_case_dataset()
+    t1 = build_case_trainer("adaptive", "scan", True, ds)
+    s1 = t1.init_state()
+    s1, _ = t1.run_megabatch(s1)
+    t2 = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    s2 = t2.init_state()
+    s2, _ = t2.run_megabatch(s2)
+
+    a = t1.remove_replicas(s1, [3], merge_leavers=True)
+    b = t2.resize(s2, 3)
+    for x, y in zip(leaves_np(a.replicas), leaves_np(b.replicas)):
+        np.testing.assert_array_equal(x, y)
+
+
+# --------------------------------------------------------------------------
+# non-finite guard (trainer.guard_nonfinite)
+# --------------------------------------------------------------------------
+
+
+def test_guard_heals_poisoned_replica_and_merge_stays_close():
+    ds = make_case_dataset()
+    clean = build_case_trainer("adaptive", "scan", True, ds)
+    c_state = clean.init_state()
+    c_state, _ = clean.run_megabatch(c_state)
+
+    faulty = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    f_state = faulty.init_state()
+    f_state = poison_row(f_state, 1)
+    f_state, info = faulty.run_megabatch(f_state)
+
+    assert info["guard_repaired"] == [1]
+    assert tree_finite(f_state.replicas)
+    assert tree_finite(f_state.global_model)
+    # acceptance: within tolerance of the fault-free run (one replica's
+    # contribution was redistributed, not lost wholesale) — whole-tree
+    # relative l2, so tiny bias leaves don't dominate the metric
+    num = den = 0.0
+    for a, b in zip(
+        leaves_np(c_state.global_model), leaves_np(f_state.global_model)
+    ):
+        a64, b64 = a.astype(np.float64), b.astype(np.float64)
+        num += float(np.sum((a64 - b64) ** 2))
+        den += float(np.sum(a64**2))
+    assert (num / max(den, 1e-18)) ** 0.5 < 0.05
+
+
+def test_guard_is_inert_on_finite_runs():
+    """Detection is read-only: guard on vs off is bit-identical."""
+    ds = make_case_dataset()
+    on = build_case_trainer("adaptive", "scan", True, ds)
+    off = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    off.guard_nonfinite = False
+    s_on, s_off = on.init_state(), off.init_state()
+    for _ in range(2):
+        s_on, i_on = on.run_megabatch(s_on)
+        s_off, i_off = off.run_megabatch(s_off)
+    assert "guard_repaired" not in i_on
+    assert i_on["train_loss"] == i_off["train_loss"]
+    for a, b in zip(leaves_np(s_on.global_model), leaves_np(s_off.global_model)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_guard_full_divergence_recovers_from_global():
+    """The sync family spreads one NaN to every replica within a mega-batch
+    (cross-replica gradient averaging); with a global copy on hand the
+    whole population restarts from the last barrier."""
+    tr = build_case_trainer("elastic", "scan", True, make_case_dataset())
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state)
+    for slot in range(4):
+        state = poison_row(state, slot)
+    state, info = tr.run_megabatch(state)
+    assert info["guard_repaired"] == [0, 1, 2, 3]
+    assert tree_finite(state.replicas)
+    assert tree_finite(state.global_model)
+
+
+def test_guard_full_divergence_without_global_raises():
+    tr = build_case_trainer("sync", "scan", True, make_case_dataset())
+    state = tr.init_state()  # sync keeps no global copy at init
+    for slot in range(4):
+        state = poison_row(state, slot)
+    with pytest.raises(FloatingPointError, match="no global model"):
+        tr.run_megabatch(state)
+
+
+def test_nan_never_contaminates_merge_under_sync_gradient_crosstalk():
+    """One poisoned replica under sync: the guard's donor is the last
+    barrier global (state carries one from mega-batch 1 on)."""
+    tr = build_case_trainer("sync", "scan", True, make_case_dataset())
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state)
+    state = poison_row(state, 0)
+    state, info = tr.run_megabatch(state)
+    assert info.get("guard_repaired")  # crosstalk poisons every row
+    assert tree_finite(state.replicas)
+    assert tree_finite(state.global_model)
+
+
+# --------------------------------------------------------------------------
+# FleetController end-to-end
+# --------------------------------------------------------------------------
+
+
+def test_controller_crash_join_nan_converges():
+    """The chaos scenario: crash + rejoin + join + NaN over a short run,
+    driven through ElasticTrainer.run(fleet=...)."""
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    fleet = FleetController(
+        injector=parse_fault_spec("1:nan:0,2:crash:1,4:join"),
+        min_replicas=2, max_replicas=6, backoff=2,
+    )
+    state, mlog = tr.run(6, fleet=fleet)
+    actions = [(e["mb"], e["action"]) for e in fleet.events]
+    assert (1, "nan") in actions
+    assert (2, "evict") in actions
+    assert (4, "join") in actions
+    assert (4, "rejoin") in actions  # crash at 2, backoff 2 -> due at 4
+    assert tr.cfg.n_replicas == 5  # 4 - 1 + rejoin + join
+    assert tree_finite(state.global_model)
+    assert mlog.records[1].get("guard_repaired") == [0]
+    # training still converges through the churn
+    assert mlog.records[-1]["train_loss"] < mlog.records[0]["train_loss"]
+
+
+def test_controller_respects_min_and_max():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    fleet = FleetController(
+        injector=parse_fault_spec("0:crash:0,1:crash:0,2:crash:0,3:join,4:join"),
+        min_replicas=2, max_replicas=4, backoff=16,
+    )
+    tr.run(6, fleet=fleet)
+    skipped = [e for e in fleet.events if e["action"] == "crash_skipped"]
+    assert any(e["reason"] == "at min_replicas" for e in skipped)
+    assert 2 <= tr.cfg.n_replicas <= 4
+
+
+def test_quarantine_backoff_escalates_for_flapping_worker():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    # crash at 1 (level 0, rejoin_in 2 -> rejoin at 3); crash again at 4,
+    # inside the probation window of that readmission -> level 1, delay 4
+    fleet = FleetController(
+        injector=parse_fault_spec("1:crash:0,4:crash:0"),
+        min_replicas=2, max_replicas=4, backoff=2, probation=4,
+    )
+    tr.run(9, fleet=fleet)
+    evicts = [e for e in fleet.events if e["action"] == "evict"]
+    assert [e["level"] for e in evicts] == [0, 1]
+    assert [e["rejoin_in"] for e in evicts] == [2, 4]
+    rejoins = [e["mb"] for e in fleet.events if e["action"] == "rejoin"]
+    assert rejoins == [3, 8]
+
+
+def test_stall_and_timeout_eviction():
+    """A stalled replica blows the timeout factor and gets a graceful
+    (preemption-style) eviction by the health detector."""
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    fleet = FleetController(
+        injector=parse_fault_spec("1:stall:2:3"),
+        min_replicas=2, max_replicas=4, timeout_factor=3.0,
+    )
+    tr.run(4, fleet=fleet)
+    actions = [e["action"] for e in fleet.events]
+    assert "stall" in actions
+    evicts = [e for e in fleet.events if e["action"] == "evict"]
+    assert evicts and evicts[0]["reason"] == "timeout"
+    assert evicts[0]["graceful"] is True
+
+
+def test_preempt_auto_rejoins_after_notice():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    fleet = FleetController(
+        injector=parse_fault_spec("1:preempt:0:2"),
+        min_replicas=2, max_replicas=4,
+    )
+    tr.run(5, fleet=fleet)
+    evicts = [e for e in fleet.events if e["action"] == "evict"]
+    assert evicts[0]["reason"] == "preempt" and evicts[0]["graceful"] is True
+    rejoins = [e["mb"] for e in fleet.events if e["action"] == "rejoin"]
+    assert rejoins == [3]
+
+
+# --------------------------------------------------------------------------
+# resize-schedule validation (fails at launch, not mid-run)
+# --------------------------------------------------------------------------
+
+
+def test_resize_schedule_validation_rejects_bad_schedules():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    with pytest.raises(ValueError, match="negative"):
+        tr.run(2, resize_schedule={-1: 4})
+    with pytest.raises(ValueError, match="twice"):
+        tr.run(2, resize_schedule={"3": 4, 3: 6})
+    with pytest.raises(ValueError, match="targets 0"):
+        tr.run(2, resize_schedule={40: 0})
+    with pytest.raises(ValueError, match="not.*integer"):
+        tr.run(2, resize_schedule={1.5: 4})
+
+    tr.algo.resize_policy = "fixed"  # instance shadow: simulate a pinned algo
+    with pytest.raises(ValueError, match="fixed"):
+        tr.run(2, resize_schedule={40: 2})
+
+
+def test_resize_schedule_validation_accepts_good_schedule():
+    tr = build_case_trainer("adaptive", "scan", True, make_case_dataset())
+    norm = tr._validate_resize_schedule({"0": 4, 2: 3})
+    assert norm == {0: 4, 2: 3}
