@@ -70,6 +70,7 @@ def build_trainer(
     b_init: int | None = None,
     het_gap: float = HET_GAP,
     engine: str = "scan",
+    overlap: bool = True,
     seed: int = 0,
 ):
     train, test = _dataset(w)
@@ -87,7 +88,7 @@ def build_trainer(
     trainer = ElasticTrainer(
         model=model, provider=provider, cfg=cfg, base_lr=base_lr,
         speed=SpeedModel(n_rep, max_gap=het_gap, seed=seed), seed=seed,
-        engine=engine,
+        engine=engine, overlap=overlap,
     )
     if b_init is not None:
         orig = trainer.init_state

@@ -39,7 +39,7 @@ B_MAX = 16
 MEGA_BATCH = 32
 
 
-def _make_trainer(engine: str, n_replicas: int):
+def _make_trainer(engine: str, n_replicas: int, overlap: bool = False):
     trainer, _ = build_trainer(
         MICRO,
         algorithm="elastic",       # static plans: fixed n_rounds, no recompiles
@@ -47,6 +47,7 @@ def _make_trainer(engine: str, n_replicas: int):
         mega_batch=MEGA_BATCH,
         b_max=B_MAX,
         engine=engine,
+        overlap=overlap,
         seed=0,
     )
     return trainer
@@ -93,21 +94,30 @@ def bench_engine_only(engine: str, n_replicas: int, repeats: int,
 
 
 def bench_end_to_end(engine: str, n_replicas: int, n_megabatches: int,
-                     warmup: int = 1) -> dict:
-    """Full run_megabatch incl. scheduling + sample packing (host-bound)."""
-    trainer = _make_trainer(engine, n_replicas)
+                     warmup: int = 1, overlap: bool = False) -> dict:
+    """Full run_megabatch incl. scheduling + sample packing (host-bound).
+
+    With ``overlap`` the scan engine runs its pipelined variant (DESIGN.md
+    §8): mega-batch N+1 is staged — lazy fetch, fused pack into the double
+    buffer, batched upload — while N executes, with warmup priming the
+    pipeline so the timed loop measures steady state.
+    """
+    trainer = _make_trainer(engine, n_replicas, overlap=overlap)
     state = trainer.init_state()
     for _ in range(warmup):
-        state, info = trainer.run_megabatch(state)
+        state, info = trainer.run_megabatch(state, prefetch=overlap)
     rounds = 0
     t0 = time.perf_counter()
-    for _ in range(n_megabatches):
-        state, info = trainer.run_megabatch(state)
+    for i in range(n_megabatches):
+        state, info = trainer.run_megabatch(
+            state, prefetch=overlap and i + 1 < n_megabatches
+        )
         rounds += info["n_rounds"]
     dt = time.perf_counter() - t0
     return {
         "mode": "end_to_end",
         "engine": engine,
+        "overlap": overlap,
         "n_replicas": n_replicas,
         "rounds": rounds,
         "wall_s": dt,
@@ -126,33 +136,60 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     rows = []
-    print(f"{'mode':<11} {'engine':<12} {'R':>3} {'rounds':>7} "
+    print(f"{'mode':<11} {'engine':<12} {'ovl':<4} {'R':>3} {'rounds':>7} "
           f"{'wall_s':>8} {'steps/s':>9}")
+
+    def emit(row):
+        rows.append(row)
+        ovl = {True: "on", False: "off"}.get(row.get("overlap"), "-")
+        print(f"{row['mode']:<11} {row['engine']:<12} {ovl:<4} "
+              f"{row['n_replicas']:>3} {row['rounds']:>7} "
+              f"{row['wall_s']:>8.3f} {row['steps_per_s']:>9.1f}")
+
     for R in REPLICA_SWEEP:
         for engine in ENGINES:
-            for fn, n in (
-                (bench_engine_only, args.repeats),
-                (bench_end_to_end, args.megabatches),
-            ):
-                row = fn(engine, R, n)
-                rows.append(row)
-                print(f"{row['mode']:<11} {row['engine']:<12} {R:>3} "
-                      f"{row['rounds']:>7} {row['wall_s']:>8.3f} "
-                      f"{row['steps_per_s']:>9.1f}")
+            emit(bench_engine_only(engine, R, args.repeats))
+            # overlap-off is the sequential oracle; only the scan engine
+            # has a pipelined variant
+            variants = (False, True) if engine == "scan" else (False,)
+            for overlap in variants:
+                emit(bench_end_to_end(engine, R, args.megabatches,
+                                      overlap=overlap))
+
+    def pick(mode, engine, R, overlap=None):
+        for r in rows:
+            if (r["mode"] == mode and r["engine"] == engine
+                    and r["n_replicas"] == R
+                    and (overlap is None or r.get("overlap") is overlap)):
+                return r
+        raise KeyError((mode, engine, R, overlap))
 
     speedups = {}
-    for mode in ("engine", "end_to_end"):
-        for R in REPLICA_SWEEP:
-            by_eng = {
-                r["engine"]: r for r in rows
-                if r["n_replicas"] == R and r["mode"] == mode
-            }
-            speedups[f"{mode}_R{R}"] = (
-                by_eng["scan"]["steps_per_s"]
-                / by_eng["legacy_loop"]["steps_per_s"]
-            )
+    for R in REPLICA_SWEEP:
+        speedups[f"engine_R{R}"] = (
+            pick("engine", "scan", R)["steps_per_s"]
+            / pick("engine", "legacy_loop", R)["steps_per_s"]
+        )
+        # end-to-end headline: the shipped configuration (scan + overlap)
+        # against the legacy sequential loop
+        speedups[f"end_to_end_R{R}"] = (
+            pick("end_to_end", "scan", R, overlap=True)["steps_per_s"]
+            / pick("end_to_end", "legacy_loop", R, overlap=False)["steps_per_s"]
+        )
     for k, v in speedups.items():
         print(f"scan/legacy speedup {k}: {v:.2f}x")
+
+    # overlap pipeline gain: scan overlap-on vs scan overlap-off, same
+    # engine, same plan trajectory (bit-identical states)
+    overlap_gain = {
+        f"R{R}": (
+            pick("end_to_end", "scan", R, overlap=True)["steps_per_s"]
+            / pick("end_to_end", "scan", R, overlap=False)["steps_per_s"]
+        )
+        for R in REPLICA_SWEEP
+    }
+    for k, v in overlap_gain.items():
+        print(f"overlap on/off gain {k}: {v:.2f}x")
 
     out = {
         "benchmark": "megabatch_engine",
@@ -161,6 +198,7 @@ def main(argv=None):
         "mega_batch": MEGA_BATCH,
         "rows": rows,
         "speedup_steps_per_s": speedups,
+        "overlap_gain": overlap_gain,
     }
     path = os.path.join(os.path.dirname(os.path.dirname(__file__)), args.out)
     with open(path, "w") as f:
@@ -170,4 +208,7 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    from .envtune import ensure_tuned_env
+
+    ensure_tuned_env()  # allocator/logging tuning; re-execs once if needed
     main()

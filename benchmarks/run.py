@@ -78,4 +78,7 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
+    from .envtune import ensure_tuned_env
+
+    ensure_tuned_env()  # allocator/logging tuning; re-execs once if needed
     main()

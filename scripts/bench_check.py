@@ -8,7 +8,9 @@ them, so a change could silently halve a speedup and still merge green.
 Headline metrics per benchmark (higher is better unless noted):
 
 * ``BENCH_engine.json``      — every entry of ``speedup_steps_per_s``
-  (scan-vs-legacy engine and end-to-end speedups per replica count)
+  (scan-vs-legacy engine and end-to-end speedups per replica count) and
+  of ``overlap_gain`` (overlapped pipeline vs sequential oracle,
+  DESIGN.md §8)
 * ``BENCH_spmm_grad.json``   — every entry of ``speedup_sparse_over_dense``
 * ``BENCH_algorithms.json``  — per-algorithm ``tta`` (time-to-accuracy,
   LOWER is better; a fresh run that no longer reaches the target where the
@@ -49,6 +51,10 @@ def headline_metrics(name: str, data: dict) -> dict[str, tuple[float | None, boo
     if name == "BENCH_engine.json":
         for k, v in data.get("speedup_steps_per_s", {}).items():
             out[f"speedup_steps_per_s/{k}"] = (float(v), True)
+        # overlap pipeline gain (DESIGN.md §8): scan overlap-on vs
+        # overlap-off end-to-end throughput, per replica count
+        for k, v in data.get("overlap_gain", {}).items():
+            out[f"overlap_gain/{k}"] = (float(v), True)
     elif name == "BENCH_spmm_grad.json":
         for k, v in data.get("speedup_sparse_over_dense", {}).items():
             out[f"speedup_sparse_over_dense/{k}"] = (float(v), True)

@@ -233,6 +233,8 @@ class FleetController:
                 if slot < trainer.cfg.n_replicas and isinstance(
                     trainer.speed, SpeedModel
                 ):
+                    # a prefetched plan was costed with the stalled factor
+                    trainer.invalidate_prefetch()
                     trainer.speed.factors[slot] /= mult
                 del self._stalls[slot]
                 self._log(mb, "stall_recovered", slot)
@@ -310,6 +312,9 @@ class FleetController:
 
         if ev.kind == "stall":
             if isinstance(trainer.speed, SpeedModel) and slot not in self._stalls:
+                # the prefetched plan (if any) was costed pre-stall: revoke
+                # it so the next plan sees the stalled factor (DESIGN.md §8)
+                trainer.invalidate_prefetch()
                 trainer.speed.factors[slot] *= ev.severity
                 self._stalls[slot] = [mb + ev.duration, ev.severity]
                 self._log(

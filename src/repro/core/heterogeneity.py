@@ -204,23 +204,73 @@ class MeasuredSpeedModel:
         such a window either divided by a zero round count or silently fell
         back to charging everyone the whole window.
         """
-        self.n_windows += 1
-        if self.n_windows <= self.warmup_windows:
+        if not self._admit_window():
             return
-        if self.skip_windows > 0:       # e.g. first window after a resize
-            self.skip_windows -= 1
-            return
+        share = self._scheduled_share(u, n_rounds)
+        if share is None:
+            return  # window counted above; nothing attributable
         work = np.asarray(per_replica_work, np.float64)
-        if u is not None:
-            u_arr = np.asarray(u, np.float64)
-            if n_rounds <= 0 or not np.any(u_arr > 0):
-                return  # window counted above; nothing attributable
-            share = u_arr / float(n_rounds)
-        else:
-            share = np.ones(self.n_replicas)
         for i, w in enumerate(work):
             if w > 0 and share[i] > 0:
                 self.observe(i, w, seconds * share[i])
+
+    def observe_shards(self, windows: np.ndarray,
+                       per_replica_work: np.ndarray,
+                       u: np.ndarray | None = None,
+                       n_rounds: int = 0) -> None:
+        """Attribute *per-shard* measured windows across their replicas.
+
+        ``windows`` is one wall-clock window per mesh shard, bracketed by
+        ``jax.debug.callback`` markers inside the shard's own mega-batch
+        program (DESIGN.md §8). Unlike :meth:`observe_plan`'s single host
+        window — which a global barrier stretches identically for everyone —
+        each shard's window reflects that shard's actual device time, so a
+        genuinely slow shard shows up as a real cross-shard contrast instead
+        of converging toward homogeneous factors. Within a shard the window
+        is split by scheduled share exactly like ``observe_plan`` (the
+        shard's replicas execute in one program; the share is the only
+        attribution signal available there).
+
+        Shares the warmup / skip-window gating with ``observe_plan``: a
+        mega-batch consumes exactly one window regardless of which
+        attribution path it takes. Windows whose shard count does not divide
+        the population (stale callbacks across a resize) charge nothing.
+        """
+        if not self._admit_window():
+            return
+        windows = np.asarray(windows, np.float64)
+        n_shards = len(windows)
+        if n_shards == 0 or self.n_replicas % n_shards != 0:
+            return
+        share = self._scheduled_share(u, n_rounds)
+        if share is None:
+            return
+        rps = self.n_replicas // n_shards
+        work = np.asarray(per_replica_work, np.float64)
+        for i, w in enumerate(work):
+            seconds = float(windows[i // rps]) * share[i]
+            if w > 0 and seconds > 0:
+                self.observe(i, w, seconds)
+
+    def _admit_window(self) -> bool:
+        """Count one measurement window; False while warmup/skip gating
+        discards it (compile time must never reach the EMAs)."""
+        self.n_windows += 1
+        if self.n_windows <= self.warmup_windows:
+            return False
+        if self.skip_windows > 0:       # e.g. first window after a resize
+            self.skip_windows -= 1
+            return False
+        return True
+
+    def _scheduled_share(self, u, n_rounds: int) -> np.ndarray | None:
+        """Per-replica scheduled share of a window; None if unattributable."""
+        if u is None:
+            return np.ones(self.n_replicas)
+        u_arr = np.asarray(u, np.float64)
+        if n_rounds <= 0 or not np.any(u_arr > 0):
+            return None
+        return u_arr / float(n_rounds)
 
     # ---- the SpeedModel interface the scheduler consumes ----
     @property
@@ -309,6 +359,54 @@ class MeasuredSpeedModel:
         self.n_windows = int(sd["meta"]["n_windows"])
         self.skip_windows = int(sd["meta"]["skip_windows"])
         self._factors = None
+
+
+class ShardWindowTimer:
+    """Host-side collector for per-shard device execution windows.
+
+    The sharded mega-batch executor brackets each shard's program with two
+    ``jax.debug.callback`` markers (trainer, DESIGN.md §8): the *start*
+    marker depends only on an input leaf, so XLA schedules it at program
+    entry; the *end* marker depends on the reduced metrics, so it fires
+    after the scan. The difference is that shard's own wall window —
+    the signal :meth:`MeasuredSpeedModel.observe_shards` consumes.
+
+    Callbacks are unordered and asynchronous: the trainer calls
+    ``jax.effects_barrier()`` before :meth:`take`, and ``take`` returns
+    ``None`` whenever the marker set is incomplete or non-positive (e.g.
+    the legacy engine, whose executor carries no markers) — callers then
+    fall back to whole-window attribution. ``timer`` is injectable so unit
+    tests drive the windows deterministically.
+    """
+
+    def __init__(self, timer: Callable[[], float] = time.perf_counter):
+        self.timer = timer
+        self._n = 0
+        self._t0: dict[int, float] = {}
+        self._t1: dict[int, float] = {}
+
+    def reset(self, n_shards: int) -> None:
+        """Open a measurement window expecting markers from n_shards."""
+        self._n = int(n_shards)
+        self._t0 = {}
+        self._t1 = {}
+
+    def mark_start(self, shard) -> None:
+        s = int(shard)
+        if s not in self._t0:   # first callback opens the shard's window
+            self._t0[s] = self.timer()
+
+    def mark_end(self, shard) -> None:
+        self._t1[int(shard)] = self.timer()  # last callback closes it
+
+    def take(self) -> np.ndarray | None:
+        """(n_shards,) window seconds, or None if any marker is missing."""
+        n, t0, t1 = self._n, self._t0, self._t1
+        self._n, self._t0, self._t1 = 0, {}, {}
+        if n == 0 or set(t0) != set(range(n)) or set(t1) != set(range(n)):
+            return None
+        w = np.array([t1[s] - t0[s] for s in range(n)], np.float64)
+        return w if np.all(w > 0) else None
 
 
 @dataclass

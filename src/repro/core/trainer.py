@@ -54,6 +54,7 @@ shape recompiles nothing.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import functools
 import time
@@ -69,8 +70,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.configs.base import ElasticConfig
 from repro.core import adaptive_sgd as asgd
 from repro.core import algorithms
-from repro.core.heterogeneity import CostModel, MeasuredSpeedModel, SpeedModel
+from repro.core.heterogeneity import (
+    CostModel, MeasuredSpeedModel, ShardWindowTimer, SpeedModel,
+)
 from repro.core.scheduler import DynamicScheduler
+from repro.data.batcher import StagingBuffers
 from repro.models.protocol import TrainableModel, as_trainable_model
 from repro.optim.sgd import SGDConfig, init_momentum, sgd_update
 from repro.sharding.rules import REPLICA_AXIS, ReplicaMeshPool, replica_spec
@@ -102,6 +106,43 @@ class ElasticState:
 
 
 @dataclass
+class _PlanView:
+    """The slice of ElasticState the planning hook reads (``algo.plan``
+    implementations consume only b / lr / the index) — lets the overlap
+    pipeline plan mega-batch N+1 from ``adapt``'s outputs before N's merged
+    state object exists."""
+
+    b: np.ndarray
+    lr: np.ndarray
+    megabatch_idx: int
+
+
+@dataclass
+class _StagedMegaBatch:
+    """A prefetched mega-batch: plan + device-resident arrays + the cursor
+    snapshot that makes it revocable (DESIGN.md §8).
+
+    ``snapshot`` holds the provider stream state, virtual-clock vector, and
+    (simulated) speed-model state captured *before* the staging plan ran:
+    ``invalidate_prefetch`` rolls the trainer back to it so a resize / fleet
+    event replans from unconsumed cursors, and ``checkpoint_payload``
+    substitutes it so a checkpoint taken mid-prefetch restores to *replay*
+    the staged batch instead of skipping it.
+    """
+
+    plan: Any                 # MegaBatchPlan
+    batches: dict             # device arrays, leaves (n_rounds, R, ...)
+    mask: Any                 # device (n_rounds, R) float32 update mask
+    lr_dev: Any               # device (R,) float32 learning rates
+    b: np.ndarray             # host copies the plan was made for (validation)
+    lr: np.ndarray
+    megabatch_idx: int
+    n_replicas: int
+    slot_id: Optional[int]    # StagingBuffers slot, None = unbuffered
+    snapshot: dict            # pre-staging cursor state (see above)
+
+
+@dataclass
 class ElasticTrainer:
     model: TrainableModel | dict
     provider: Any
@@ -119,6 +160,10 @@ class ElasticTrainer:
     guard_nonfinite: bool = True     # quarantine NaN/Inf replicas before the
                                      # merge (DESIGN.md §7); numerically inert
                                      # while every replica stays finite
+    overlap: bool = True             # overlapped mega-batch pipeline
+                                     # (DESIGN.md §8): stage N+1 + dispatch
+                                     # eval while N executes. scan engine
+                                     # only; False = the sequential oracle
     mesh: Optional[Mesh] = None      # replica mesh for cfg.placement='sharded'
                                      # (None = build one over the local devices)
     seed: int = 0
@@ -160,6 +205,18 @@ class ElasticTrainer:
         self._eval_batches = None        # pre-staged device test batches
         self._eval_batches_src = None    # pins the staged list + its batches
         self._eval_batches_key = None    # content fingerprint of that list
+        self._staged = None              # prefetched _StagedMegaBatch
+        self._staging = StagingBuffers() # double-buffered host staging slots
+        # per-shard measured timing (DESIGN.md §8): only the sharded
+        # executors carry the debug-callback markers, and only a measured
+        # speed model consumes the windows. Built before the executors,
+        # which close over it.
+        self._shard_timer = (
+            ShardWindowTimer()
+            if self.cfg.placement == "sharded"
+            and isinstance(self.speed, MeasuredSpeedModel)
+            else None
+        )
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -361,6 +418,7 @@ class ElasticTrainer:
         transforms = self._transforms
         mesh = self.mesh
         s0, s1 = replica_spec(0), replica_spec(1)
+        timer = self._shard_timer
 
         jit_round = jax.jit(
             shard_map(
@@ -375,11 +433,28 @@ class ElasticTrainer:
                 check_rep=False,
             )
         )
+
+        def timed_megabatch(r, m, b, lr, mask):
+            """Per-shard window markers (DESIGN.md §8): the start callback
+            depends only on an input leaf so it schedules at program entry;
+            the end callback depends on the reduced metrics so it fires
+            after the scan. Numerically inert — traced in only when a
+            measured speed model will consume the windows."""
+            if timer is not None:
+                idx = jax.lax.axis_index(REPLICA_AXIS)
+                jax.debug.callback(
+                    lambda s, _dep: timer.mark_start(s), idx, mask[0, 0]
+                )
+            out_r, out_m, metrics = megabatch_fn(r, m, b, lr, mask, transforms)
+            if timer is not None:
+                jax.debug.callback(
+                    lambda s, _dep: timer.mark_end(s), idx, metrics["loss"]
+                )
+            return out_r, out_m, metrics
+
         jit_megabatch = jax.jit(
             shard_map(
-                lambda r, m, b, lr, mask: megabatch_fn(
-                    r, m, b, lr, mask, transforms
-                ),
+                timed_megabatch,
                 mesh=mesh,
                 # stacked batches/mask are (n_rounds, R, ...): dim 1 shards
                 in_specs=(s0, s0, s1, s0, s1),
@@ -544,6 +619,11 @@ class ElasticTrainer:
                 f"algorithm {self.algo.name!r} pins its replica membership "
                 f"(resize_policy='fixed'); cannot resize {R} -> {new_R}"
             )
+        # a prefetched plan was made for the old R: revoke it and roll the
+        # cursors back *before* any membership mutation (DESIGN.md §8). The
+        # new_R == R early return above deliberately keeps the prefetch —
+        # a constant schedule stays bit-identical to the unscheduled run.
+        self.invalidate_prefetch()
 
         # ---- final normalized merge over the outgoing population ----
         alphas = np.asarray(state.b, np.float64)
@@ -663,6 +743,9 @@ class ElasticTrainer:
             raise ValueError(
                 f"cannot remove all {R} replicas (removal of {drop})"
             )
+        # the permutation below moves speed factors / clocks with their
+        # replica — a prefetched plan consumed them in the old order
+        self.invalidate_prefetch()
         survivors = [i for i in range(R) if i not in set(drop)]
         perm = survivors + drop
 
@@ -748,18 +831,46 @@ class ElasticTrainer:
     # ------------------------------------------------------------------
     # one mega-batch
     # ------------------------------------------------------------------
-    def run_megabatch(self, state: ElasticState) -> tuple[ElasticState, dict]:
+    def run_megabatch(
+        self, state: ElasticState, prefetch: Optional[bool] = None
+    ) -> tuple[ElasticState, dict]:
         """Plan, execute, and merge one mega-batch; returns (new_state, info).
 
         Generic engine sequence — every step delegates to the strategy:
         ``algo.plan`` → rounds (with ``algo.round_transforms`` traced in) →
         ``algo.merge`` → ``algo.adapt`` → merge-cost accounting.
 
+        With ``overlap`` on (and the scan engine), the pipelined variant
+        runs instead (DESIGN.md §8): the mega-batch is dispatched from a
+        pre-staged device-resident plan, and while the device executes, the
+        host adapts b/lr and stages mega-batch N+1 (plan → fused pack into a
+        double buffer → one batched upload). ``prefetch=False`` suppresses
+        staging the *next* mega-batch (used for the final one); the default
+        prefetches. Both variants produce bit-identical trajectories under
+        the simulated speed model.
+
         Donation contract: with the scan engine on TPU/GPU, ``state.replicas``
         and ``state.momentum`` are DONATED to the device program — treat
         ``state`` as consumed and continue from the returned state only.
         (On CPU donation is disabled and old states stay readable.)
         """
+        if self.overlap and self.engine == "scan":
+            # prefetch is opt-in (run() and bench loops pass it): a bare
+            # run_megabatch call must leave no dangling staged plan, so the
+            # caller's live cursors (provider / clock / speed) stay exactly
+            # where a sequential mega-batch would leave them
+            return self._run_megabatch_overlap(state, bool(prefetch))
+        # a stale prefetch (e.g. the overlap flag was flipped off between
+        # calls) must not leak advanced cursors into the sequential path
+        if self._staged is not None:
+            self.invalidate_prefetch()
+        return self._run_megabatch_sync(state)
+
+    def _run_megabatch_sync(self, state: ElasticState) -> tuple[ElasticState, dict]:
+        """Sequential mega-batch: plan → execute → merge, one after another.
+
+        The differential oracle for the overlap pipeline (``--overlap off``):
+        this path is the pre-pipeline code, byte for byte."""
         cfg = self.cfg
         R = cfg.n_replicas
         mega_samples = cfg.mega_batch * cfg.b_max
@@ -783,14 +894,13 @@ class ElasticTrainer:
         # brackets actual device work.
         measure = isinstance(self.speed, MeasuredSpeedModel)
         t_start = self.speed.begin() if measure else None
+        if measure and self._shard_timer is not None:
+            self._shard_timer.reset(int(self.mesh.shape[REPLICA_AXIS]))
         replicas, momentum, train_loss, train_acc = run_rounds(
             state, plan, b_slots, self._transforms
         )
         if measure:
-            self.speed.observe_plan(
-                plan.per_replica_work(R), self.speed.elapsed(t_start),
-                u=plan.u, n_rounds=plan.n_rounds,
-            )
+            self._observe_window(plan, R, self.speed.elapsed(t_start))
 
         # ---- non-finite guard (DESIGN.md §7) ----
         # A replica whose params went NaN/Inf during the rounds is healed
@@ -844,6 +954,251 @@ class ElasticTrainer:
         if guard_repaired:
             info["guard_repaired"] = guard_repaired
         return new_state, info
+
+    # ------------------------------------------------------------------
+    # overlapped mega-batch pipeline (DESIGN.md §8)
+    # ------------------------------------------------------------------
+    def _run_megabatch_overlap(
+        self, state: ElasticState, prefetch: bool
+    ) -> tuple[ElasticState, dict]:
+        """Pipelined mega-batch: dispatch N from the pre-staged arrays, then
+        do all host work for N+1 (adapt → plan → fused pack → batched
+        upload) *before* the single host sync that collects N's metrics —
+        on an async backend the device is busy with N throughout.
+
+        Host-stateful operations keep exactly the sequential path's relative
+        order (… plan N → merge-cost clock bump N → plan N+1 …), and
+        ``merge``/``adapt``/the guard are pure functions of (state, plan,
+        device results), so trajectories are bit-identical to
+        ``_run_megabatch_sync`` under the simulated speed model. Under a
+        measured speed model, plan N+1 is made with factors one window stale
+        — the price of the pipeline, documented in DESIGN.md §8.
+        """
+        cfg = self.cfg
+        R = cfg.n_replicas
+        staged = self._take_staged(state)
+        if staged is None:
+            staged = self._stage_megabatch(
+                state.b, state.lr, int(state.megabatch_idx)
+            )
+        plan = staged.plan
+
+        measure = isinstance(self.speed, MeasuredSpeedModel)
+        t_start = self.speed.begin() if measure else None
+        if measure and self._shard_timer is not None:
+            self._shard_timer.reset(int(self.mesh.shape[REPLICA_AXIS]))
+        replicas, momentum, m = self._megabatch(
+            state.replicas,
+            state.momentum,
+            staged.batches,
+            staged.lr_dev,
+            staged.mask,
+            transforms=self._transforms,
+        )
+
+        # ---- host work overlapped with the in-flight device program ----
+        n_merges = self.algo.merges_per_megabatch(plan)
+        self.scheduler.clock.t[:] += self.merge_cost * n_merges
+        virtual_time = float(self.scheduler.clock.t.max())
+        new_b, new_lr = self.algo.adapt(state, plan, cfg)
+        if prefetch:
+            self._staged = self._stage_megabatch(
+                new_b, new_lr, int(state.megabatch_idx) + 1
+            )
+
+        # ---- collect: the single host sync of the mega-batch ----
+        train_loss, train_acc = float(m["loss"]), float(m["accuracy"])
+        # the staged slot's consumer is done on device -> reusable two
+        # stagings from now (the other slot is next in line)
+        if staged.slot_id is not None:
+            self._staging.release(staged.slot_id)
+        if measure:
+            self._observe_window(plan, R, self.speed.elapsed(t_start))
+
+        # ---- non-finite guard (DESIGN.md §7) ----
+        guard_repaired: list[int] = []
+        if self.guard_nonfinite:
+            finite = np.asarray(self._finite_rows(replicas))
+            if not finite.all():
+                replicas, momentum = self._repair_nonfinite(
+                    state, replicas, momentum, finite
+                )
+                guard_repaired = np.flatnonzero(~finite).tolist()
+
+        # ---- merge (the barrier) ----
+        outcome = self.algo.merge(self, state, plan, replicas)
+        alphas = (
+            outcome.alphas if outcome.alphas is not None else np.full(R, 1.0 / R)
+        )
+
+        new_state = ElasticState(
+            replicas=outcome.replicas,
+            global_model=outcome.global_model,
+            prev_global=outcome.prev_global,
+            momentum=momentum,
+            b=np.asarray(new_b, np.float64),
+            lr=np.asarray(new_lr, np.float64),
+            megabatch_idx=state.megabatch_idx + 1,
+        )
+        info = {
+            "n_replicas": R,
+            "u": plan.u.tolist(),
+            "b": np.round(np.asarray(new_b), 2).tolist(),
+            "lr": np.round(np.asarray(new_lr), 6).tolist(),
+            "alphas": np.round(np.asarray(alphas, np.float64), 4).tolist(),
+            "pert_active": bool(outcome.pert_active),
+            "train_loss": train_loss,
+            "train_accuracy": train_acc,
+            "virtual_time": virtual_time,
+            "n_rounds": plan.n_rounds,
+        }
+        if guard_repaired:
+            info["guard_repaired"] = guard_repaired
+        return new_state, info
+
+    def _observe_window(self, plan, R: int, seconds: float) -> None:
+        """Feed one mega-batch's measurement window to the speed model:
+        per-shard callback windows when the sharded executors produced a
+        complete set, else the whole host window (legacy engine, vmap
+        placement, or a marker lost in flight)."""
+        windows = None
+        if self._shard_timer is not None:
+            jax.effects_barrier()   # debug callbacks are async; flush them
+            windows = self._shard_timer.take()
+        if windows is not None:
+            self.speed.observe_shards(
+                windows, plan.per_replica_work(R), u=plan.u,
+                n_rounds=plan.n_rounds,
+            )
+        else:
+            self.speed.observe_plan(
+                plan.per_replica_work(R), seconds, u=plan.u,
+                n_rounds=plan.n_rounds,
+            )
+
+    def _cursor_snapshot(self) -> dict:
+        """Deep copies of every host cursor a staging plan advances:
+        provider stream (sample RNG + position), virtual clocks, and — for
+        the simulated model, whose planning consumes jitter RNG — the speed
+        state. The measured model is not snapshotted: planning does not
+        mutate it, and rolling it back would clobber window observations
+        made after the snapshot."""
+        return {
+            "provider": (
+                copy.deepcopy(self.provider.state_dict())
+                if hasattr(self.provider, "state_dict") else None
+            ),
+            "clock_t": np.asarray(self.scheduler.clock.t, np.float64).copy(),
+            "speed": (
+                None if isinstance(self.speed, MeasuredSpeedModel)
+                else copy.deepcopy(self.speed.state_dict())
+            ),
+        }
+
+    def _stage_megabatch(
+        self, b: np.ndarray, lr: np.ndarray, megabatch_idx: int
+    ) -> _StagedMegaBatch:
+        """Plan one mega-batch and stage it onto the devices.
+
+        Fetches lazily where the provider supports it (ids + work units
+        only), packs the whole plan grid in one fused vectorized gather into
+        a double-buffered host slot, and issues a single batched
+        ``jax.device_put`` of {batches, mask, lr} — onto the replica mesh
+        under the sharded placement, so the executor's in_specs are already
+        satisfied. The cursor snapshot is taken first, making the whole
+        staging revocable (``invalidate_prefetch``) and checkpoint-safe
+        (``checkpoint_payload``).
+        """
+        cfg = self.cfg
+        R = cfg.n_replicas
+        b_slots = cfg.b_max
+        mega_samples = cfg.mega_batch * cfg.b_max
+        b = np.asarray(b, np.float64).copy()
+        lr = np.asarray(lr, np.float64).copy()
+        snapshot = self._cursor_snapshot()
+
+        provider = self.provider
+        if hasattr(provider, "fetch_staged"):
+            def fetch(i, take):
+                return provider.fetch_staged(take, b_slots)
+        else:
+            def fetch(i, take):
+                payload = provider.fetch(take, b_slots)
+                return payload, provider.work_units(payload)
+
+        view = _PlanView(b=b, lr=lr, megabatch_idx=megabatch_idx)
+        plan = self.algo.plan(self.scheduler, view, mega_samples, fetch)
+        min_rounds = (
+            _next_pow2(plan.n_rounds) if self.round_bucket else plan.n_rounds
+        )
+        grid = plan.payload_grid(R, min_rounds=max(min_rounds, 1))
+
+        slot_id, out = None, None
+        if hasattr(provider, "staging_spec"):
+            spec = provider.staging_spec(len(grid), R, b_slots)
+            slot_id, out = self._staging.acquire(spec)
+            batches_np, mask = provider.stack_plan(grid, b_slots, out=out)
+        else:
+            batches_np, mask = provider.stack_plan(grid, b_slots)
+
+        lr32 = np.asarray(lr, np.float32)
+        if cfg.placement == "sharded":
+            s1 = NamedSharding(self.mesh, replica_spec(1))
+            s0 = NamedSharding(self.mesh, replica_spec(0))
+            batches, mask_dev, lr_dev = jax.device_put(
+                (batches_np, mask, lr32),
+                ({k: s1 for k in batches_np}, s1, s0),
+            )
+        else:
+            batches, mask_dev, lr_dev = jax.device_put((batches_np, mask, lr32))
+        return _StagedMegaBatch(
+            plan=plan, batches=batches, mask=mask_dev, lr_dev=lr_dev,
+            b=b, lr=lr, megabatch_idx=int(megabatch_idx), n_replicas=R,
+            slot_id=slot_id, snapshot=snapshot,
+        )
+
+    def _take_staged(self, state: ElasticState) -> Optional[_StagedMegaBatch]:
+        """Consume the prefetched mega-batch if it matches ``state`` —
+        same mega-batch index, population width, and b/lr vectors. Any
+        mismatch (an out-of-band mutation that did not go through
+        ``invalidate_prefetch``) discards it with a cursor rollback so the
+        plan is simply replayed."""
+        s = self._staged
+        if s is None:
+            return None
+        self._staged = None
+        if (
+            s.megabatch_idx == int(state.megabatch_idx)
+            and s.n_replicas == self.cfg.n_replicas
+            and np.array_equal(s.b, np.asarray(state.b, np.float64))
+            and np.array_equal(s.lr, np.asarray(state.lr, np.float64))
+        ):
+            return s
+        self._discard_staged(s)
+        return None
+
+    def invalidate_prefetch(self) -> None:
+        """Revoke the prefetched mega-batch (if any) and roll every host
+        cursor back to the pre-staging snapshot. Called before anything
+        that invalidates a staged plan — a resize, targeted eviction, fleet
+        speed mutation, or checkpoint restore — so the next mega-batch
+        replans from unconsumed cursors (correctness over overlap,
+        DESIGN.md §8)."""
+        s = self._staged
+        if s is None:
+            return
+        self._staged = None
+        self._discard_staged(s)
+
+    def _discard_staged(self, s: _StagedMegaBatch) -> None:
+        snap = s.snapshot
+        if snap["provider"] is not None and hasattr(self.provider, "load_state_dict"):
+            self.provider.load_state_dict(snap["provider"])
+        self.scheduler.clock.t[:] = snap["clock_t"]
+        if snap["speed"] is not None:
+            self.speed.load_state_dict(snap["speed"])
+        if s.slot_id is not None:
+            self._staging.release(s.slot_id)
 
     def _repair_nonfinite(self, state, replicas, momentum, finite):
         """Re-clone non-finite replicas from a finite donor (DESIGN.md §7).
@@ -940,18 +1295,34 @@ class ElasticTrainer:
             self._eval_batches_src = (test_batches, list(test_batches))
         return self._eval_batches
 
+    def evaluate_async(self, params: PyTree, test_batches: list):
+        """Dispatch the jitted eval of every staged test batch without
+        syncing; returns a zero-arg collector that blocks on the results.
+        The overlap pipeline (DESIGN.md §8) dispatches at a mega-batch
+        boundary and collects at the next one, so eval device work queues
+        behind (and interleaves with) the next mega-batch instead of
+        stalling the host between them."""
+        pending = [
+            self._eval(params, batch)
+            for batch in self._staged_test_batches(test_batches)
+        ]
+
+        def collect() -> dict:
+            tot_acc, tot_loss, tot_n = 0.0, 0.0, 0.0
+            for loss, aux in pending:
+                n = float(aux["n_valid"])
+                tot_acc += float(aux["accuracy"]) * n
+                tot_loss += float(loss) * n
+                tot_n += n
+            return {
+                "accuracy": tot_acc / max(tot_n, 1.0),
+                "loss": tot_loss / max(tot_n, 1.0),
+            }
+
+        return collect
+
     def evaluate(self, params: PyTree, test_batches: list) -> dict:
-        tot_acc, tot_loss, tot_n = 0.0, 0.0, 0.0
-        for batch in self._staged_test_batches(test_batches):
-            loss, aux = self._eval(params, batch)
-            n = float(aux["n_valid"])
-            tot_acc += float(aux["accuracy"]) * n
-            tot_loss += float(loss) * n
-            tot_n += n
-        return {
-            "accuracy": tot_acc / max(tot_n, 1.0),
-            "loss": tot_loss / max(tot_n, 1.0),
-        }
+        return self.evaluate_async(params, test_batches)()
 
     # ------------------------------------------------------------------
     # crash-consistent checkpointing (DESIGN.md §7)
@@ -964,8 +1335,29 @@ class ElasticTrainer:
         clocks, and the speed model's arrays; metadata carries the
         mega-batch index, population width, algorithm name, the speed
         model's counters/RNG, and the data provider's stream cursor + RNG.
+
+        Prefetch interplay (DESIGN.md §8): when a mega-batch for this exact
+        ``state`` is staged but unconsumed, the *snapshot* cursors from
+        before its staging plan are checkpointed instead of the live ones —
+        the prefetched batch has not been trained on, so a restore must
+        replay it, not skip it. (Provider stream, virtual clocks, and the
+        simulated speed model roll back; a measured model's EMAs are
+        observation history, not plan cursors, and stay live.)
         """
         speed_sd = self.speed.state_dict()
+        provider_sd = (
+            self.provider.state_dict()
+            if hasattr(self.provider, "state_dict") else None
+        )
+        clock_t = np.asarray(self.scheduler.clock.t, np.float64)
+        staged = self._staged
+        if staged is not None and staged.megabatch_idx == int(state.megabatch_idx):
+            snap = staged.snapshot
+            if snap["provider"] is not None:
+                provider_sd = snap["provider"]
+            clock_t = np.asarray(snap["clock_t"], np.float64)
+            if snap["speed"] is not None:
+                speed_sd = snap["speed"]
         tree = {
             "replicas": state.replicas,
             "momentum": state.momentum,
@@ -973,7 +1365,7 @@ class ElasticTrainer:
             "prev_global": state.prev_global,
             "b": np.asarray(state.b, np.float64),
             "lr": np.asarray(state.lr, np.float64),
-            "clock_t": np.asarray(self.scheduler.clock.t, np.float64),
+            "clock_t": clock_t,
             "speed": speed_sd["arrays"],
         }
         metadata = {
@@ -989,8 +1381,8 @@ class ElasticTrainer:
             },
             "speed_meta": speed_sd["meta"],
         }
-        if hasattr(self.provider, "state_dict"):
-            metadata["provider"] = self.provider.state_dict()
+        if provider_sd is not None:
+            metadata["provider"] = provider_sd
         return tree, metadata
 
     def restore_checkpoint(self, path: str) -> ElasticState:
@@ -1006,6 +1398,8 @@ class ElasticTrainer:
         """
         from repro.checkpoint import store as ckpt_store
 
+        # any prefetched plan belongs to the pre-restore trajectory
+        self.invalidate_prefetch()
         path = ckpt_store.resolve_checkpoint(path)
         meta = ckpt_store.load_metadata(path)
         if meta.get("algorithm") != self.cfg.algorithm:
@@ -1153,30 +1547,67 @@ class ElasticTrainer:
         else:
             state = self.init_state()
         mlog = MetricsLog()
+        overlap_active = self.overlap and self.engine == "scan"
+        pending_eval = None  # (mlog record to backfill, collector)
+
+        def emit_line(record):
+            if not verbose:
+                return
+            log(
+                f"[{self.cfg.algorithm}] mb={record['megabatch']}",
+                loss=round(record["train_loss"], 4),
+                acc=round(record.get("accuracy", float("nan")), 4),
+                u=record["u"],
+                b=record["b"],
+                vt=round(record["virtual_time"], 3),
+            )
+
+        def drain_eval():
+            nonlocal pending_eval
+            if pending_eval is not None:
+                record, collect = pending_eval
+                ev = collect()
+                record.update(accuracy=ev["accuracy"], test_loss=ev["loss"])
+                pending_eval = None
+                # the progress line for an async-eval boundary waits for the
+                # backfill, so it never shows a placeholder accuracy
+                emit_line(record)
+
         t0 = time.perf_counter()
         for mb in range(int(state.megabatch_idx), n_megabatches):
             if resize_schedule is not None and mb in resize_schedule:
                 state = self.resize(state, resize_schedule[mb])
             if fleet is not None:
                 state = fleet.step(self, state, mb)
-            state, info = self.run_megabatch(state)
+            # the final mega-batch stages nothing: run() must end with every
+            # host cursor consumed (no dangling prefetch in checkpoints or
+            # for a caller that continues this trainer by hand)
+            state, info = self.run_megabatch(
+                state, prefetch=overlap_active and (mb + 1 < n_megabatches)
+            )
             if checkpoint is not None:
                 checkpoint.maybe_save(self, state)
+            # collect the PREVIOUS boundary's async eval only now — its
+            # device work ran behind this mega-batch instead of serializing
+            drain_eval()
+            collect = None
             if test_batches is not None and (mb + 1) % eval_every == 0:
-                ev = self.evaluate(state.global_model, test_batches)
-                info.update(accuracy=ev["accuracy"], test_loss=ev["loss"])
+                if overlap_active:
+                    collect = self.evaluate_async(
+                        state.global_model, test_batches
+                    )
+                else:
+                    ev = self.evaluate(state.global_model, test_batches)
+                    info.update(accuracy=ev["accuracy"], test_loss=ev["loss"])
             info["megabatch"] = mb + 1
             info["wall_clock"] = time.perf_counter() - t0
             mlog.append(**info)
-            if verbose:
-                log(
-                    f"[{self.cfg.algorithm}] mb={mb+1}",
-                    loss=round(info["train_loss"], 4),
-                    acc=round(info.get("accuracy", float("nan")), 4),
-                    u=info["u"],
-                    b=info["b"],
-                    vt=round(info["virtual_time"], 3),
-                )
+            if collect is not None:
+                # MetricsLog.append copies kv: backfill the stored record
+                pending_eval = (mlog.records[-1], collect)
+            else:
+                emit_line(mlog.records[-1])
+        drain_eval()
         if checkpoint is not None:
             checkpoint.wait()
         return state, mlog

@@ -73,6 +73,24 @@ class SparseBatch:
         return int((self.feat_mask & self.sample_mask[:, None]).sum())
 
 
+@dataclass
+class LazySparseBatch:
+    """Deferred batch: sample ids + work units, no packed arrays yet.
+
+    The overlap staging path (DESIGN.md §8) fetches these during planning —
+    ``work`` is computed straight from the CSR ``indptr`` so the discrete-
+    event scheduler can cost the dispatch without paying for ``pack_batch``'s
+    per-row Python loop. The whole mega-batch is then packed in one
+    vectorized gather by :func:`repro.data.batcher.stack_lazy_plan`.
+    ``work`` equals the packed batch's ``total_nnz`` exactly (per-row nnz
+    clipped to ``max_nnz``), so virtual-clock trajectories are bit-identical
+    to the eager path.
+    """
+
+    ids: np.ndarray   # (n,) int64 sample ids, n <= b_slots
+    work: int         # sum(min(nnz_i, max_nnz)) == packed total_nnz
+
+
 def subset(ds: SparseDataset, ids: np.ndarray) -> SparseDataset:
     """Row subset of a dataset (rebuilds CSR)."""
     indptr = [0]

@@ -60,11 +60,13 @@ def stack_token_batches(batches: list[dict]) -> dict:
     return {k: np.stack([b[k] for b in batches]) for k in batches[0]}
 
 
-def stack_plan_token_batches(grid: list[list], template: dict) -> dict:
+def stack_plan_token_batches(
+    grid: list[list], template: dict, out: dict | None = None
+) -> dict:
     """Stack a scheduler payload grid into (n_rounds, R, ...) token arrays.
 
     Masked (None) slots stay all-zero — identical to an empty token batch
     (sample_mask all False)."""
     from .batcher import stack_plan_grid
 
-    return stack_plan_grid(grid, template)
+    return stack_plan_grid(grid, template, out=out)

@@ -128,6 +128,14 @@ def main(argv=None):
     ap.add_argument("--engine", default="scan", choices=list(ENGINES),
                     help="mega-batch executor: device-resident scan (default)"
                          " or the per-round host loop")
+    ap.add_argument("--overlap", default="on", choices=["on", "off"],
+                    help="overlapped mega-batch pipeline (DESIGN.md §8):"
+                         " stage mega-batch N+1 (plan + pack + upload) while"
+                         " N executes, and evaluate asynchronously. 'off' is"
+                         " the sequential differential oracle — bit-identical"
+                         " trajectories under the simulated speed model."
+                         " Only the scan engine pipelines; the legacy engine"
+                         " always runs sequentially")
     ap.add_argument("--placement", default="vmap", choices=list(PLACEMENTS),
                     help="replica placement: single-device vmap (default) or"
                          " shard_map over a 1-D replica device mesh (spans"
@@ -236,6 +244,7 @@ def main(argv=None):
         model=model, provider=provider, cfg=ecfg,
         sgd=SGDConfig(), base_lr=args.lr, speed=speed, seed=args.seed,
         engine=args.engine, sparse_grads=not args.dense_grads, mesh=mesh,
+        overlap=args.overlap == "on",
     )
     fleet = None
     if args.faults or args.timeout_factor > 0:

@@ -357,6 +357,44 @@ def test_constant_schedule_bit_identical(case_ds, algo):
             np.testing.assert_array_equal(a, b)
 
 
+def test_resize_invalidates_pending_prefetch(case_ds):
+    """A resize at the boundary revokes the prefetched plan (staged for the
+    old population) with a full cursor rollback (DESIGN.md §8): continuing
+    at the new width must match a run that never prefetched."""
+    def go(prefetch):
+        tr = build_case_trainer("adaptive", "scan", True, case_ds)
+        tr.overlap = prefetch
+        state = tr.init_state()
+        state, _ = tr.run_megabatch(state, prefetch=prefetch)
+        if prefetch:
+            assert tr._staged is not None
+        state = tr.resize(state, 6)
+        if prefetch:
+            assert tr._staged is None       # resize revoked it
+        state, info = tr.run_megabatch(state)
+        return tr, info
+
+    tr_p, info_p = go(True)
+    tr_s, info_s = go(False)
+    assert info_p["train_loss"] == info_s["train_loss"]
+    assert info_p["u"] == info_s["u"]
+    assert tr_p.provider.state_dict() == tr_s.provider.state_dict()
+    np.testing.assert_array_equal(tr_p.scheduler.clock.t,
+                                  tr_s.scheduler.clock.t)
+
+
+def test_constant_schedule_keeps_prefetch(case_ds):
+    """``resize_schedule={mb: current_R}`` is a no-op boundary: the staged
+    plan survives it (and the run stays bit-identical — covered above by
+    test_constant_schedule_bit_identical, which runs with overlap on)."""
+    tr = build_case_trainer("adaptive", "scan", True, case_ds)
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state, prefetch=True)
+    assert tr._staged is not None
+    state = tr.resize(state, tr.cfg.n_replicas)     # same R: early return
+    assert tr._staged is not None
+
+
 def test_grow_then_shrink_converges_within_5pct(case_ds):
     """The acceptance bar: an elastic run that grows then shrinks stays
     within 5% of the fixed-R final loss on the bench task."""
