@@ -72,9 +72,16 @@ def headline_metrics(name: str, data: dict) -> dict[str, tuple[float | None, boo
             )
         for row in data.get("rows", []):
             algo = row["algorithm"]
-            tta = row.get("tta")
-            out[f"tta/{algo}"] = (None if tta is None else float(tta), False)
-            out[f"best_acc/{algo}"] = (float(row["best_acc"]), True)
+            # per-metric presence checks: a baseline written before a metric
+            # existed (first run of a new benchmark column) simply lacks the
+            # key — that is "no baseline yet", not a data error
+            if "tta" in row:
+                tta = row["tta"]
+                out[f"tta/{algo}"] = (
+                    None if tta is None else float(tta), False
+                )
+            if "best_acc" in row:
+                out[f"best_acc/{algo}"] = (float(row["best_acc"]), True)
         if data.get("faults"):
             # fault-recovery scenario (DESIGN.md §7): faulty TTA / clean
             # TTA under the seeded fault script — LOWER is better, and a
@@ -110,7 +117,10 @@ def check_file(name: str, fresh: dict, base: dict,
 
     The table covers *every* headline metric — it is printed on pass as
     well as on fail, so CI logs show the metric trajectories instead of
-    only surfacing them once a run trips the tolerance.
+    only surfacing them once a run trips the tolerance. Metrics present in
+    the fresh run but absent from the baseline (the first run of a new
+    benchmark) are informational NEW rows: they gate nothing now and become
+    the baseline once committed.
     """
     fresh_m = headline_metrics(name, fresh)
     base_m = headline_metrics(name, base)
@@ -120,7 +130,7 @@ def check_file(name: str, fresh: dict, base: dict,
                  "benchmark output schema changed? update headline_metrics()"],
                 [])
     failures, table = [], []
-    width = max(len(k) for k in base_m)
+    width = max(len(k) for k in (*base_m, *fresh_m))
     for key, (b_val, higher_better) in sorted(base_m.items()):
         f_val = fresh_m[key][0] if key in fresh_m else None
         drift = "n/a"
@@ -159,6 +169,13 @@ def check_file(name: str, fresh: dict, base: dict,
         table.append(
             f"  {key:<{width}}  baseline={_fmt(b_val):>8}  "
             f"fresh={_fmt(f_val):>8}  drift={drift:>7}  [{arrow}] {status}"
+        )
+    for key in sorted(set(fresh_m) - set(base_m)):
+        f_val, higher_better = fresh_m[key]
+        arrow = "higher=better" if higher_better else "lower=better"
+        table.append(
+            f"  {key:<{width}}  baseline={'--':>8}  "
+            f"fresh={_fmt(f_val):>8}  drift={'n/a':>7}  [{arrow}] NEW"
         )
     return failures, table
 

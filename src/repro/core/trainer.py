@@ -442,12 +442,12 @@ class ElasticTrainer:
             measured speed model will consume the windows."""
             if timer is not None:
                 idx = jax.lax.axis_index(REPLICA_AXIS)
-                jax.debug.callback(
+                jax.debug.callback(  # jaxlint: disable=JL006 — ShardTimer window-open marker, the measured-speed observation path (DESIGN.md §8)
                     lambda s, _dep: timer.mark_start(s), idx, mask[0, 0]
                 )
             out_r, out_m, metrics = megabatch_fn(r, m, b, lr, mask, transforms)
             if timer is not None:
-                jax.debug.callback(
+                jax.debug.callback(  # jaxlint: disable=JL006 — ShardTimer window-close marker, paired with mark_start above
                     lambda s, _dep: timer.mark_end(s), idx, metrics["loss"]
                 )
             return out_r, out_m, metrics

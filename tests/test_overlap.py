@@ -34,6 +34,7 @@ import numpy as np
 import pytest
 
 from golden.generate import build_case_trainer, make_case_dataset
+from tools.jaxlint.sentinel import RetraceSentinel
 from repro.core import algorithms
 from repro.core.heterogeneity import (
     MeasuredSpeedModel,
@@ -88,6 +89,20 @@ def test_overlap_bit_identical(case_ds, algo, engine):
             np.testing.assert_array_equal(a, b)
     np.testing.assert_array_equal(st_on.b, st_off.b)
     np.testing.assert_array_equal(st_on.lr, st_off.lr)
+
+
+def test_overlap_steady_state_never_retraces(case_ds):
+    """After the warmup mega-batch, the pipelined path must be compile-free:
+    staging, async dispatch, and the scan executor all reuse their first
+    programs (DESIGN.md §8 — a retrace inside the overlap window would
+    serialize the pipeline it exists to hide)."""
+    tr = _trainer("elastic", "scan", case_ds, True)
+    state = tr.init_state()
+    state, _ = tr.run_megabatch(state, prefetch=True)   # compiles everything
+    with RetraceSentinel(budget=0, label="overlap steady state"):
+        for _ in range(2):
+            state, info = tr.run_megabatch(state, prefetch=True)
+    assert np.isfinite(info["train_loss"])
 
 
 def test_overlap_bit_identical_with_eval(case_ds):

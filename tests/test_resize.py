@@ -32,6 +32,7 @@ import numpy as np
 import pytest
 
 from golden.generate import build_case_trainer, make_case_dataset
+from tools.jaxlint.sentinel import RetraceSentinel
 from repro.configs.base import ElasticConfig
 from repro.core import algorithms
 from repro.core.heterogeneity import (
@@ -313,7 +314,10 @@ def test_resize_legacy_engine(case_ds):
 
 def test_resize_revisited_population_recompiles_nothing(case_ds):
     """Resizing back to a previously-seen R (same pow2 round bucket) must
-    reuse every jitted executor variant (DESIGN.md §6)."""
+    reuse every jitted executor variant (DESIGN.md §6). Checked two ways:
+    the trainer's own jit-cache census stays flat, and the RetraceSentinel
+    sees zero backend compiles — the latter also covers programs the census
+    cannot see (shard_map internals, helper jits)."""
     tr = build_case_trainer("elastic", "scan", True, case_ds)
     state = tr.init_state()
     state, _ = tr.run_megabatch(state)   # R=4 variants compile
@@ -323,7 +327,8 @@ def test_resize_revisited_population_recompiles_nothing(case_ds):
     state, _ = tr.run_megabatch(state)   # R=4 again: cached
     state = tr.resize(state, 2)          # merge @4 again: cached
     n0 = tr.compile_cache_size()
-    state, info = tr.run_megabatch(state)
+    with RetraceSentinel(budget=0, label="revisited population"):
+        state, info = tr.run_megabatch(state)
     assert np.isfinite(info["train_loss"])
     assert tr.compile_cache_size() == n0, (
         "revisiting a previously-seen population shape recompiled"

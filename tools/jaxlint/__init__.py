@@ -1,0 +1,11 @@
+"""jaxlint: repo-specific static analysis for the trainer's JAX contracts.
+
+Usage: ``python -m tools.jaxlint src benchmarks scripts`` (see
+tools/README.md and DESIGN.md §9). The package is stdlib-only by design —
+``sentinel`` (the runtime retrace counter) is the one jax-importing module
+and is deliberately NOT imported here so the CLI works in the dependency-free
+CI lint job.
+"""
+from .engine import Finding, LintResult, lint, load_baseline
+
+__all__ = ["Finding", "LintResult", "lint", "load_baseline"]

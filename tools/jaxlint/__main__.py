@@ -1,0 +1,77 @@
+"""CLI: ``python -m tools.jaxlint [paths...]``.
+
+Exit codes: 0 clean (or all findings suppressed/baselined), 1 findings,
+2 usage/parse errors. Must stay importable without jax installed (the CI
+lint job has no project deps).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from . import engine, rules
+
+DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.txt")
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m tools.jaxlint",
+        description="AST-based JAX contract checker (rules JL001-JL007; "
+        "see DESIGN.md §9)",
+    )
+    parser.add_argument("paths", nargs="*", default=["src"],
+                        help="files or directories to lint (default: src)")
+    parser.add_argument("--root", default=os.getcwd(),
+                        help="repo root paths are resolved against")
+    parser.add_argument("--select", action="append", default=None,
+                        metavar="JLxxx", help="run only these rules")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline file of accepted findings")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="rewrite the baseline with current findings "
+                        "and exit 0 (policy: keep it empty — prefer inline "
+                        "disables with reasons)")
+    parser.add_argument("--list-rules", action="store_true",
+                        help="print the rule registry and exit")
+    parser.add_argument("-q", "--quiet", action="store_true",
+                        help="suppress the summary line")
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for code, rule_cls in sorted(rules.RULES.items()):
+            print(f"{code}  {rule_cls.summary}")
+        return 0
+
+    baseline = engine.load_baseline(args.baseline)
+    result = engine.lint(
+        args.paths, root=args.root, select=args.select,
+        baseline=None if args.write_baseline else baseline,
+    )
+    for err in result.errors:
+        print(f"error: {err}", file=sys.stderr)
+    if result.errors:
+        return 2
+
+    if args.write_baseline:
+        engine.write_baseline(args.baseline, result.findings)
+        print(f"wrote {len(result.findings)} baseline entries to "
+              f"{args.baseline}")
+        return 0
+
+    for f in result.findings:
+        print(f.render())
+    if not args.quiet:
+        parts = [f"{len(result.findings)} finding(s)",
+                 f"{result.n_files} file(s)"]
+        if result.suppressed:
+            parts.append(f"{len(result.suppressed)} suppressed inline")
+        if result.baselined:
+            parts.append(f"{len(result.baselined)} baselined")
+        print("jaxlint: " + ", ".join(parts), file=sys.stderr)
+    return 1 if result.findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,311 @@
+"""Static call graph over the analyzed files.
+
+Purpose-built for one question: *which functions trace inside the engine's
+jitted device programs?* (DESIGN.md §1/§4). Roots are the engine bodies
+(``round_body`` / ``megabatch_fn``) and every callable an algorithm's
+``round_transforms`` hook hands to ``RoundTransforms``; the closure follows
+
+* direct calls to names resolvable in the lexical scope chain (sibling
+  nested defs, enclosing functions, module top level),
+* ``from m import f`` / ``import m as alias`` edges into other analyzed
+  modules (``tu.tree_map`` -> repro.utils.tree.tree_map), including
+  relative imports,
+* functions passed as arguments to tracing combinators
+  (``jax.lax.scan(body, ...)``, ``jax.vmap(f)``, ``shard_map(f, ...)``,
+  ``functools.partial(f, ...)``),
+* every function/lambda lexically nested inside a traced function
+  (closures trace with their parent).
+
+Method calls through objects (``self.x()``, ``obj.m()``) are not resolved —
+receiver types are unknowable without inference, and the traced surface the
+trainer contract cares about is reachable through the cases above.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from . import config
+from .engine import Module, Project
+
+#: combinators whose function-valued arguments trace
+_TRACING_COMBINATORS = frozenset(
+    {"scan", "vmap", "pmap", "jit", "shard_map", "partial", "custom_vjp",
+     "checkpoint", "remat", "while_loop", "fori_loop", "cond", "switch",
+     "grad", "value_and_grad"}
+)
+
+FuncNode = ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda
+
+
+@dataclasses.dataclass
+class FuncInfo:
+    qualname: str                  # "repro.core.trainer:_build_jits.round_body"
+    module: Module
+    node: FuncNode
+    name: str                      # terminal name ("<lambda>" for lambdas)
+    parent: Optional["FuncInfo"]
+    children: list["FuncInfo"] = dataclasses.field(default_factory=list)
+    local_defs: dict[str, "FuncInfo"] = dataclasses.field(default_factory=dict)
+
+    def __hash__(self):
+        return id(self.node)
+
+    def __eq__(self, other):
+        return self is other
+
+
+@dataclasses.dataclass
+class ModuleScope:
+    module: Module
+    #: top-level function name -> FuncInfo
+    defs: dict[str, FuncInfo]
+    #: import alias -> dotted module path ("tu" -> "repro.utils.tree")
+    import_mods: dict[str, str]
+    #: imported name -> (dotted module, attr) ("sgd_update" ->
+    #: ("repro.optim.sgd", "sgd_update"))
+    import_names: dict[str, tuple[str, str]]
+
+
+def _resolve_relative(module_name: str, level: int, target: str | None) -> str:
+    """``from ..x import y`` in package context -> absolute dotted path."""
+    parts = module_name.split(".")
+    # module_name refers to the *module*; level=1 means its package
+    base = parts[: len(parts) - level] if level <= len(parts) else []
+    if target:
+        base = base + target.split(".")
+    return ".".join(base)
+
+
+def _collect_imports(module: Module) -> tuple[dict[str, str], dict[str, tuple[str, str]]]:
+    mods: dict[str, str] = {}
+    names: dict[str, tuple[str, str]] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                mods[alias.asname or alias.name.split(".")[0]] = (
+                    alias.name if alias.asname else alias.name.split(".")[0]
+                )
+                if alias.asname:
+                    mods[alias.asname] = alias.name
+        elif isinstance(node, ast.ImportFrom):
+            src = node.module or ""
+            if node.level:
+                src = _resolve_relative(module.name, node.level, node.module)
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                names[alias.asname or alias.name] = (src, alias.name)
+    return mods, names
+
+
+class CallGraph:
+    def __init__(self):
+        self.funcs: dict[int, FuncInfo] = {}          # id(node) -> info
+        self.scopes: dict[str, ModuleScope] = {}      # module name -> scope
+        self.edges: dict[FuncInfo, set[FuncInfo]] = {}
+        self.traced_roots: list[FuncInfo] = []
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def build(cls, project: Project) -> "CallGraph":
+        g = cls()
+        for module in project.modules:
+            mods, names = _collect_imports(module)
+            scope = ModuleScope(module=module, defs={}, import_mods=mods,
+                                import_names=names)
+            g.scopes[module.name] = scope
+            g._register_functions(module, scope)
+        for info in list(g.funcs.values()):
+            g.edges[info] = g._call_targets(info)
+        g._find_roots()
+        return g
+
+    def _register_functions(self, module: Module, scope: ModuleScope) -> None:
+        def visit(node: ast.AST, parent: Optional[FuncInfo], prefix: str):
+            for child in ast.iter_child_nodes(node):
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    qual = f"{prefix}{child.name}"
+                    info = FuncInfo(
+                        qualname=f"{module.name}:{qual}",
+                        module=module, node=child, name=child.name,
+                        parent=parent,
+                    )
+                    self.funcs[id(child)] = info
+                    if parent is not None:
+                        parent.children.append(info)
+                        parent.local_defs[child.name] = info
+                    else:
+                        scope.defs.setdefault(child.name, info)
+                    visit(child, info, f"{qual}.")
+                elif isinstance(child, ast.Lambda):
+                    info = FuncInfo(
+                        qualname=f"{module.name}:{prefix}<lambda@L{child.lineno}>",
+                        module=module, node=child, name="<lambda>",
+                        parent=parent,
+                    )
+                    self.funcs[id(child)] = info
+                    if parent is not None:
+                        parent.children.append(info)
+                    visit(child, info, prefix)
+                elif isinstance(child, ast.ClassDef):
+                    visit(child, parent, f"{prefix}{child.name}.")
+                else:
+                    visit(child, parent, prefix)
+
+        visit(module.tree, None, "")
+
+    # -- resolution ---------------------------------------------------------
+
+    def _resolve_name(self, name: str, ctx: FuncInfo) -> Optional[FuncInfo]:
+        """Resolve a bare name in a function's lexical scope chain."""
+        cur = ctx.parent
+        while cur is not None:
+            if name in cur.local_defs:
+                return cur.local_defs[name]
+            cur = cur.parent
+        scope = self.scopes[ctx.module.name]
+        if name in scope.defs:
+            return scope.defs[name]
+        if name in scope.import_names:
+            mod, attr = scope.import_names[name]
+            target_scope = self.scopes.get(mod)
+            if target_scope and attr in target_scope.defs:
+                return target_scope.defs[attr]
+        return None
+
+    def _resolve_attr(self, node: ast.Attribute, ctx: FuncInfo) -> Optional[FuncInfo]:
+        """Resolve ``alias.f`` where alias is an imported analyzed module."""
+        if not isinstance(node.value, ast.Name):
+            return None
+        scope = self.scopes[ctx.module.name]
+        target = scope.import_mods.get(node.value.id)
+        if target is None and node.value.id in scope.import_names:
+            mod, attr = scope.import_names[node.value.id]
+            target = f"{mod}.{attr}" if mod else attr
+        if target is None:
+            return None
+        target_scope = self.scopes.get(target)
+        if target_scope and node.attr in target_scope.defs:
+            return target_scope.defs[node.attr]
+        return None
+
+    def resolve_call(self, func_expr: ast.AST, ctx: FuncInfo) -> Optional[FuncInfo]:
+        if isinstance(func_expr, ast.Name):
+            return self._resolve_name(func_expr.id, ctx)
+        if isinstance(func_expr, ast.Attribute):
+            return self._resolve_attr(func_expr, ctx)
+        return None
+
+    def _call_targets(self, info: FuncInfo) -> set[FuncInfo]:
+        targets: set[FuncInfo] = set()
+        for node in iter_body_nodes(info.node):
+            if not isinstance(node, ast.Call):
+                continue
+            t = self.resolve_call(node.func, info)
+            if t is not None:
+                targets.add(t)
+            # combinator args: jax.lax.scan(body, ...), jax.vmap(f), ...
+            callee_name = None
+            if isinstance(node.func, ast.Attribute):
+                callee_name = node.func.attr
+            elif isinstance(node.func, ast.Name):
+                callee_name = node.func.id
+            if callee_name in _TRACING_COMBINATORS:
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name):
+                        t = self._resolve_name(arg.id, info)
+                        if t is not None:
+                            targets.add(t)
+                    elif isinstance(arg, ast.Attribute):
+                        t = self._resolve_attr(arg, info)
+                        if t is not None:
+                            targets.add(t)
+        return targets
+
+    # -- traced surface ------------------------------------------------------
+
+    def _find_roots(self) -> None:
+        roots: list[FuncInfo] = []
+        for info in self.funcs.values():
+            if info.name in config.TRACED_ROOT_NAMES:
+                roots.append(info)
+        # callables handed to RoundTransforms(...) inside round_transforms
+        for info in self.funcs.values():
+            if info.name != config.TRANSFORM_FACTORY_NAME:
+                continue
+            for node in iter_body_nodes(info.node):
+                if not (isinstance(node, ast.Call)
+                        and _terminal_name(node.func) == config.TRANSFORM_CLASS_NAME):
+                    continue
+                for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Lambda):
+                        lam = self.funcs.get(id(arg))
+                        if lam is not None:
+                            roots.append(lam)
+                    elif isinstance(arg, (ast.Name, ast.Attribute)):
+                        t = self.resolve_call(arg, info)
+                        if t is not None:
+                            roots.append(t)
+        self.traced_roots = roots
+
+    def traced_functions(self) -> set[FuncInfo]:
+        """Closure of the traced roots over call edges + lexical nesting."""
+        seen: set[FuncInfo] = set()
+        stack = list(self.traced_roots)
+        while stack:
+            info = stack.pop()
+            if info in seen:
+                continue
+            seen.add(info)
+            stack.extend(self.edges.get(info, ()))
+            stack.extend(info.children)   # closures trace with their parent
+        return seen
+
+
+# ---------------------------------------------------------------------------
+# AST helpers shared with the rules
+# ---------------------------------------------------------------------------
+
+
+def iter_body_nodes(func: FuncNode):
+    """Walk a function's own body, NOT descending into nested function
+    definitions or lambdas (those are separate FuncInfos)."""
+    if isinstance(func, ast.Lambda):
+        todo: list[ast.AST] = [func.body]
+    else:
+        todo = list(func.body)
+    while todo:
+        node = todo.pop()
+        yield node
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.Lambda)):
+            continue  # separate FuncInfo — don't attribute its body here
+        todo.extend(ast.iter_child_nodes(node))
+
+
+def _terminal_name(expr: ast.AST) -> Optional[str]:
+    if isinstance(expr, ast.Name):
+        return expr.id
+    if isinstance(expr, ast.Attribute):
+        return expr.attr
+    return None
+
+
+def terminal_name(expr: ast.AST) -> Optional[str]:
+    return _terminal_name(expr)
+
+
+def dotted_name(expr: ast.AST) -> Optional[str]:
+    """'a.b.c' for a pure Name/Attribute chain, else None."""
+    parts: list[str] = []
+    cur = expr
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if isinstance(cur, ast.Name):
+        parts.append(cur.id)
+        return ".".join(reversed(parts))
+    return None

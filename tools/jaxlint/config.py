@@ -1,0 +1,115 @@
+"""jaxlint configuration: the repo-specific contract surface.
+
+Every constant here names a *real* invariant from DESIGN.md — the rules in
+rules.py are generic AST passes parameterized by this module, so the checker
+stays honest about what is convention (this file) vs. what is analysis
+(rules.py). Adjust these when the trainer's contract surface moves.
+"""
+from __future__ import annotations
+
+# ---------------------------------------------------------------------------
+# JL001/JL002 — the traced surface (DESIGN.md §1/§4)
+# ---------------------------------------------------------------------------
+
+#: Call-graph roots that trace inside the engine's jitted device programs.
+#: Everything statically reachable from these (plus the callables an
+#: algorithm's ``round_transforms`` hook hands to ``RoundTransforms``) must
+#: obey the jit rules: no host syncs, no Python branching on tracer values.
+TRACED_ROOT_NAMES: tuple[str, ...] = ("round_body", "megabatch_fn")
+
+#: Methods whose returned ``RoundTransforms(...)`` members are traced
+#: (DESIGN.md §4 hook contract).
+TRANSFORM_FACTORY_NAME = "round_transforms"
+
+#: The frozen static-jit-arg container those factories must construct.
+TRANSFORM_CLASS_NAME = "RoundTransforms"
+
+#: ``float()``/``int()``/``bool()`` on these attributes is static metadata,
+#: not a device sync (shapes and ranks are Python values at trace time).
+STATIC_SCALAR_ATTRS: frozenset[str] = frozenset({"ndim", "shape", "size", "dtype"})
+
+#: Array-reduction method names whose appearance in an ``if``/``while`` test
+#: inside traced code means Python is branching on a tracer (JL002).
+REDUCTION_METHOD_NAMES: frozenset[str] = frozenset(
+    {"sum", "max", "min", "mean", "any", "all", "prod", "item"}
+)
+
+#: Module roots whose calls produce/consume tracer values: a call into any
+#: of these inside an ``if``/``while`` test is Python branching on a tracer.
+JAX_MODULE_ROOTS: tuple[str, ...] = ("jax",)
+
+# ---------------------------------------------------------------------------
+# JL003 — buffer donation (DESIGN.md §1: scan engine donates replica/momentum)
+# ---------------------------------------------------------------------------
+
+#: Donation registry: callables whose donated positional argument indices
+#: cannot be recovered statically (``donate_argnums`` is computed, e.g.
+#: backend-gated in trainer._build_jits). Maps the callable's terminal name
+#: (``self._megabatch`` -> ``_megabatch``) to its donated positions. Literal
+#: ``donate_argnums=(...)`` sites are discovered without registry help.
+DONATED_CALLABLES: dict[str, tuple[int, ...]] = {
+    # trainer's scan-engine entry points: replicas (0) and momentum (1) are
+    # donated on TPU/GPU backends (trainer.py _build_jits / shard wrappers)
+    "_megabatch": (0, 1),
+    "jit_megabatch": (0, 1),
+}
+
+# ---------------------------------------------------------------------------
+# JL006 — host callbacks (DESIGN.md §8: measured timing only)
+# ---------------------------------------------------------------------------
+
+#: Modules (path suffixes, POSIX separators) allowed to use
+#: ``jax.debug.callback`` / ``io_callback``: the measured-speed timing layer.
+#: Anywhere else, a callback in the hot loop is a hidden host round-trip —
+#: take an inline ``# jaxlint: disable=JL006 — <reason>`` if intentional.
+APPROVED_CALLBACK_MODULE_SUFFIXES: tuple[str, ...] = (
+    "core/heterogeneity.py",
+)
+
+#: Fully-qualified callback entry points the rule recognizes.
+CALLBACK_QUALNAMES: frozenset[str] = frozenset(
+    {
+        "jax.debug.callback",
+        "jax.experimental.io_callback",
+        "jax.pure_callback",
+    }
+)
+
+#: Bare names that count when imported from jax (``from jax.experimental
+#: import io_callback``).
+CALLBACK_BARE_NAMES: frozenset[str] = frozenset({"io_callback"})
+
+# ---------------------------------------------------------------------------
+# JL005 — pytree dataclasses (DESIGN.md §3: RowSparseGrad is the exemplar)
+# ---------------------------------------------------------------------------
+
+#: ``tree_util`` entry points whose pytree arguments must be registered
+#: containers (a freshly constructed unregistered dataclass passed here is
+#: silently treated as a leaf — or crashes — depending on the op).
+TREE_OP_NAMES: frozenset[str] = frozenset(
+    {
+        "tree_map", "tree_leaves", "tree_flatten", "tree_unflatten",
+        "tree_all", "tree_reduce", "tree_structure", "tree_map_with_path",
+    }
+)
+
+# ---------------------------------------------------------------------------
+# JL007 — checkpoint payload completeness (DESIGN.md §7, the PR 6 bug class)
+# ---------------------------------------------------------------------------
+
+#: The trainer-state dataclass whose fields the payload must cover.
+STATE_CLASS_NAME = "ElasticState"
+
+#: State fields that are process-local and intentionally NOT serialized
+#: (none today; list field names here if that ever changes).
+STATE_FIELD_EXEMPTIONS: frozenset[str] = frozenset()
+
+#: Function-name convention the cross-check keys on: ``checkpoint_payload``
+#: builds dict literals named ``tree`` and ``metadata``; the restore side
+#: builds ``like`` and subscripts the loaded ``tree``.
+CHECKPOINT_PAYLOAD_NAME = "checkpoint_payload"
+CHECKPOINT_RESTORE_NAME = "restore_checkpoint"
+PAYLOAD_TREE_VAR = "tree"
+PAYLOAD_META_VAR = "metadata"
+RESTORE_LIKE_VAR = "like"
+RESTORE_TREE_VARS: tuple[str, ...] = ("tree",)

@@ -1,0 +1,278 @@
+"""jaxlint engine: file discovery, suppression parsing, baseline, driver.
+
+Stdlib-only (``ast`` + ``re``): the linter must run in the CI lint job,
+which installs no project dependencies — importing jax (or repro) from the
+static-analysis path is itself a layering bug.
+
+Suppression syntax (checked, not stringly-matched elsewhere):
+
+* inline  — ``some_code()  # jaxlint: disable=JL001`` silences the named
+  rule(s) on that physical line (comma-separated; a trailing ``— reason``
+  is encouraged and ignored by the parser).
+* file    — ``# jaxlint: disable-file=JL006`` anywhere at module top level
+  (first 10 lines) silences the rule(s) for the whole file.
+* baseline — a checked-in file of known findings (``path::rule::code``)
+  that the CLI subtracts before failing. The shipped baseline is empty and
+  the self-check test keeps it that way: new debt needs an inline disable
+  with a reason, not a baseline entry (ISSUE 8 policy).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+import re
+from typing import Iterable, Optional
+
+_SUPPRESS_RE = re.compile(r"#\s*jaxlint:\s*disable=([A-Z0-9, ]+)")
+_SUPPRESS_FILE_RE = re.compile(r"#\s*jaxlint:\s*disable-file=([A-Z0-9, ]+)")
+_FILE_DIRECTIVE_SCAN_LINES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation, anchored to a source line."""
+
+    path: str      # POSIX relpath from the lint root
+    line: int      # 1-based
+    col: int       # 0-based
+    rule: str      # "JL001"
+    message: str
+    code: str = "" # stripped source of the flagged line (baseline fingerprint)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"
+
+    def baseline_key(self) -> str:
+        # line numbers churn; (path, rule, code) survives unrelated edits
+        return f"{self.path}::{self.rule}::{self.code}"
+
+
+@dataclasses.dataclass
+class Module:
+    """One parsed source file."""
+
+    path: str          # absolute
+    rel: str           # POSIX relpath from the lint root
+    name: str          # dotted module name ("repro.core.trainer")
+    tree: ast.Module
+    lines: list[str]   # raw source lines (1-based access via lines[i-1])
+
+    def line_source(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+
+@dataclasses.dataclass
+class Project:
+    """All modules under analysis plus shared lazily-built artifacts."""
+
+    root: str
+    modules: list[Module]
+    errors: list[str]
+    _callgraph: Optional[object] = None
+
+    def by_rel(self, rel: str) -> Optional[Module]:
+        for m in self.modules:
+            if m.rel == rel:
+                return m
+        return None
+
+    @property
+    def callgraph(self):
+        if self._callgraph is None:
+            from . import callgraph
+
+            self._callgraph = callgraph.CallGraph.build(self)
+        return self._callgraph
+
+
+def module_name_for(rel: str) -> str:
+    """Dotted module name for a POSIX relpath; mirrors the repo layout where
+    importable code lives under ``src/`` (``src/repro/x.py`` -> ``repro.x``)
+    and top-level dirs (benchmarks/, scripts/) are packages of their own."""
+    parts = rel.split("/")
+    if parts[0] == "src":
+        parts = parts[1:]
+    if parts and parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][: -len(".py")]
+    if parts and parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(p for p in parts if p)
+
+
+def iter_py_files(paths: Iterable[str], root: str) -> list[str]:
+    """Expand files/dirs into a sorted list of absolute .py paths."""
+    out: set[str] = set()
+    for p in paths:
+        # cwd-relative (usual CLI case), falling back to root-relative
+        ap = p if os.path.isabs(p) or os.path.exists(p) else os.path.join(root, p)
+        if os.path.isfile(ap) and ap.endswith(".py"):
+            out.add(os.path.abspath(ap))
+        elif os.path.isdir(ap):
+            for dirpath, dirnames, filenames in os.walk(ap):
+                dirnames[:] = [d for d in dirnames if d != "__pycache__"]
+                for fn in filenames:
+                    if fn.endswith(".py"):
+                        out.add(os.path.abspath(os.path.join(dirpath, fn)))
+    return sorted(out)
+
+
+def load_project(paths: Iterable[str], root: str) -> Project:
+    root = os.path.abspath(root)
+    modules, errors = [], []
+    for path in iter_py_files(paths, root):
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        try:
+            with open(path, encoding="utf-8") as f:
+                src = f.read()
+            tree = ast.parse(src, filename=path)
+        except (OSError, SyntaxError) as e:
+            errors.append(f"{rel}: cannot parse: {e}")
+            continue
+        modules.append(
+            Module(
+                path=path,
+                rel=rel,
+                name=module_name_for(rel),
+                tree=tree,
+                lines=src.splitlines(),
+            )
+        )
+    return Project(root=root, modules=modules, errors=errors)
+
+
+# ---------------------------------------------------------------------------
+# suppression
+# ---------------------------------------------------------------------------
+
+
+def _parse_rule_list(blob: str) -> set[str]:
+    return {r.strip() for r in blob.split(",") if r.strip()}
+
+
+def suppressed_rules(module: Module) -> tuple[dict[int, set[str]], set[str]]:
+    """(line -> rules disabled inline, rules disabled file-wide)."""
+    by_line: dict[int, set[str]] = {}
+    file_wide: set[str] = set()
+    for i, line in enumerate(module.lines, start=1):
+        if "jaxlint" not in line:
+            continue
+        m = _SUPPRESS_RE.search(line)
+        if m:
+            by_line.setdefault(i, set()).update(_parse_rule_list(m.group(1)))
+        m = _SUPPRESS_FILE_RE.search(line)
+        if m and i <= _FILE_DIRECTIVE_SCAN_LINES:
+            file_wide.update(_parse_rule_list(m.group(1)))
+    return by_line, file_wide
+
+
+def split_suppressed(
+    findings: list[Finding], project: Project
+) -> tuple[list[Finding], list[Finding]]:
+    """Partition findings into (active, inline/file-suppressed)."""
+    cache: dict[str, tuple[dict[int, set[str]], set[str]]] = {}
+    active, suppressed = [], []
+    for f in findings:
+        mod = project.by_rel(f.path)
+        if mod is None:
+            active.append(f)
+            continue
+        if mod.rel not in cache:
+            cache[mod.rel] = suppressed_rules(mod)
+        by_line, file_wide = cache[mod.rel]
+        if f.rule in file_wide or f.rule in by_line.get(f.line, ()):
+            suppressed.append(f)
+        else:
+            active.append(f)
+    return active, suppressed
+
+
+# ---------------------------------------------------------------------------
+# baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: str) -> set[str]:
+    """Baseline entries (``path::rule::code`` lines; comments/blank ignored)."""
+    entries: set[str] = set()
+    if not os.path.exists(path):
+        return entries
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                entries.add(line)
+    return entries
+
+
+def write_baseline(path: str, findings: list[Finding]) -> None:
+    with open(path, "w", encoding="utf-8") as f:
+        f.write(
+            "# jaxlint baseline — one `path::rule::code` entry per accepted\n"
+            "# finding. Policy (DESIGN.md §9): keep this file EMPTY; new\n"
+            "# exceptions take an inline `# jaxlint: disable=JLxxx — reason`.\n"
+        )
+        for key in sorted({fi.baseline_key() for fi in findings}):
+            f.write(key + "\n")
+
+
+def split_baselined(
+    findings: list[Finding], baseline: set[str]
+) -> tuple[list[Finding], list[Finding]]:
+    active = [f for f in findings if f.baseline_key() not in baseline]
+    known = [f for f in findings if f.baseline_key() in baseline]
+    return active, known
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: list[Finding]            # active (reportable) findings
+    suppressed: list[Finding]          # silenced by inline/file directives
+    baselined: list[Finding]           # silenced by the baseline file
+    errors: list[str]                  # parse failures (always fatal)
+    n_files: int = 0
+
+
+def lint(
+    paths: Iterable[str],
+    root: str,
+    select: Optional[Iterable[str]] = None,
+    baseline: Optional[set[str]] = None,
+) -> LintResult:
+    """Run every (selected) rule over ``paths``; returns the partitioned
+    findings. ``baseline`` is a pre-loaded entry set (see load_baseline)."""
+    from . import rules
+
+    project = load_project(paths, root)
+    wanted = set(select) if select else None
+    findings: list[Finding] = []
+    for code, rule_cls in sorted(rules.RULES.items()):
+        if wanted is not None and code not in wanted:
+            continue
+        findings.extend(rule_cls().run(project))
+    # attach source fingerprints (rules only know positions)
+    with_code: list[Finding] = []
+    for f in findings:
+        mod = project.by_rel(f.path)
+        code_line = mod.line_source(f.line) if mod else ""
+        with_code.append(dataclasses.replace(f, code=code_line))
+    with_code.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    active, suppressed = split_suppressed(with_code, project)
+    if baseline:
+        active, known = split_baselined(active, baseline)
+    else:
+        known = []
+    return LintResult(
+        findings=active,
+        suppressed=suppressed,
+        baselined=known,
+        errors=project.errors,
+        n_files=len(project.modules),
+    )

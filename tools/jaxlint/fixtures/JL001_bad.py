@@ -1,0 +1,18 @@
+"""JL001 bad fixture: host syncs inside the traced surface (never executed,
+only parsed by tests)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def helper(x):
+    # reachable from round_body -> traced; np.asarray is a host materialize
+    return np.asarray(x)
+
+
+def round_body(params, grads, lr):
+    loss = jnp.mean(grads)
+    scale = float(loss)            # host sync on a tracer
+    host = loss.item()             # the canonical sync
+    pulled = jax.device_get(grads)
+    return helper(params), scale, host, pulled

@@ -1,0 +1,11 @@
+"""JL002 bad fixture: Python control flow branching on tracer values."""
+import jax.numpy as jnp
+
+
+def megabatch_fn(replicas, mask):
+    if jnp.any(mask > 0):                     # tracer in an `if` test
+        replicas = replicas + 1.0
+    gated = replicas if mask.sum() > 0 else replicas * 0.0   # and in IfExp
+    while jnp.max(gated) > 1.0:               # and in `while`
+        gated = gated * 0.5
+    return gated

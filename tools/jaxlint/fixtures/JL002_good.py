@@ -1,0 +1,13 @@
+"""JL002 good fixture: static-config branching and lax-style selects."""
+import jax.numpy as jnp
+
+
+def megabatch_fn(replicas, mask, cfg, momentum=None):
+    if cfg.weight_decay:                      # static config flag: fine
+        replicas = replicas * (1.0 - cfg.weight_decay)
+    if momentum is None:                      # structural None check: fine
+        momentum = jnp.zeros_like(replicas)
+    if replicas.ndim == 3:                    # shape metadata: fine
+        replicas = replicas.reshape(replicas.shape[0], -1)
+    # data-dependent gating stays on device
+    return jnp.where(mask > 0, replicas + momentum, replicas)

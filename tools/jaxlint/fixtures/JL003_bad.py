@@ -1,0 +1,15 @@
+"""JL003 bad fixture: a donated buffer is read after the donating call."""
+import jax
+
+
+def step(params, grads):
+    return params - 0.1 * grads
+
+
+train_step = jax.jit(step, donate_argnums=(0,))
+
+
+def run(state, grads):
+    new_params = train_step(state.params, grads)
+    stale = state.params.sum()     # donated buffer read without re-binding
+    return new_params, stale

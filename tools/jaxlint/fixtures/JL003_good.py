@@ -1,0 +1,14 @@
+"""JL003 good fixture: donated buffers are re-bound before any later read."""
+import jax
+
+
+def step(params, grads):
+    return params - 0.1 * grads
+
+
+train_step = jax.jit(step, donate_argnums=(0,))
+
+
+def run(state, grads):
+    state = state.replace(params=train_step(state.params, grads))
+    return state.params.sum()      # `state` was re-bound: fresh buffer

@@ -1,0 +1,27 @@
+"""JL004 bad fixture: unhashable / mutable static jit args."""
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass
+class RoundTransforms:            # contract class must be frozen
+    grad_transform: object = None
+
+
+@dataclass
+class Options:
+    depth: int = 2
+
+
+def fn(x, transforms=None, opts=None):
+    return x
+
+
+jitted = jax.jit(fn, static_argnames=("transforms", "opts"))
+
+
+def run(x):
+    a = jitted(x, opts={"depth": 2})          # dict literal: unhashable
+    b = jitted(x, transforms=Options())       # non-frozen dataclass
+    return a, b

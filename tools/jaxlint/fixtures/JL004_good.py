@@ -1,0 +1,25 @@
+"""JL004 good fixture: frozen-dataclass static args."""
+from dataclasses import dataclass
+
+import jax
+
+
+@dataclass(frozen=True)
+class RoundTransforms:
+    grad_transform: object = None
+
+
+@dataclass(frozen=True)
+class Options:
+    depth: int = 2
+
+
+def fn(x, transforms=None, opts=None):
+    return x
+
+
+jitted = jax.jit(fn, static_argnames=("transforms", "opts"))
+
+
+def run(x):
+    return jitted(x, transforms=RoundTransforms(), opts=Options(depth=3))

@@ -1,0 +1,20 @@
+"""JL005 bad fixture: unregistered dataclass crossing the jit boundary."""
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SparseGrad:                  # no tree_util registration
+    rows: jax.Array
+    values: jax.Array
+
+
+def round_body(w, idx, vals):
+    g = SparseGrad(rows=idx, values=vals)     # becomes a jit output pytree
+    return g
+
+
+def host_side(idx, vals):
+    return jax.tree_util.tree_map(jnp.square, SparseGrad(idx, vals))

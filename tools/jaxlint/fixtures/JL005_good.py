@@ -1,0 +1,23 @@
+"""JL005 good fixture: the pytree dataclass is registered (the repo's
+RowSparseGrad pattern)."""
+from dataclasses import dataclass
+
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class SparseGrad:
+    rows: jax.Array
+    values: jax.Array
+
+    def tree_flatten(self):
+        return (self.rows, self.values), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def round_body(w, idx, vals):
+    return SparseGrad(rows=idx, values=vals)

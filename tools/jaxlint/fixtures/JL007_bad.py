@@ -1,0 +1,43 @@
+"""JL007 bad fixture: payload / restore / state field sets disagree."""
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class ElasticState:
+    replicas: object
+    momentum: object
+    b: np.ndarray
+    lr: np.ndarray                 # never serialized -> silently reset
+    megabatch_idx: int = 0
+
+
+class Trainer:
+    def checkpoint_payload(self, state):
+        tree = {
+            "replicas": state.replicas,
+            "momentum": state.momentum,
+            "b": state.b,
+        }
+        metadata = {"megabatch_idx": state.megabatch_idx}
+        return tree, metadata
+
+    def restore_checkpoint(self, path):
+        like = {
+            "replicas": None,
+            "b": None,             # "momentum" missing from the template
+            "extra": None,         # ...and "extra" is never serialized
+        }
+        tree, meta = load(path, like)
+        return ElasticState(
+            replicas=tree["replicas"],
+            momentum=None,         # tree["momentum"]/tree["b"] never read
+            b=np.zeros(1),
+            lr=np.zeros(1),
+            megabatch_idx=meta["megabatch_idx"],
+        )
+
+
+def load(path, like):
+    return like, {}

@@ -1,0 +1,42 @@
+"""JL007 good fixture: payload, restore template, reads and state fields
+all agree (metadata covers the scalar field)."""
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class ElasticState:
+    replicas: object
+    momentum: object
+    b: np.ndarray
+    megabatch_idx: int = 0
+
+
+class Trainer:
+    def checkpoint_payload(self, state):
+        tree = {
+            "replicas": state.replicas,
+            "momentum": state.momentum,
+            "b": state.b,
+        }
+        metadata = {"megabatch_idx": state.megabatch_idx}
+        return tree, metadata
+
+    def restore_checkpoint(self, path):
+        like = {
+            "replicas": None,
+            "momentum": None,
+            "b": None,
+        }
+        tree, meta = load(path, like)
+        return ElasticState(
+            replicas=tree["replicas"],
+            momentum=tree["momentum"],
+            b=np.asarray(tree["b"]),
+            megabatch_idx=meta["megabatch_idx"],
+        )
+
+
+def load(path, like):
+    return like, {}

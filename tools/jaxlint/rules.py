@@ -1,0 +1,723 @@
+"""jaxlint rules JL001–JL007.
+
+Each rule is a class with a ``code``, a one-line ``summary`` and a
+``run(project) -> list[Finding]``; the ``RULES`` registry at the bottom is
+what the engine iterates. Rules are generic AST passes — everything
+repo-specific (root names, approved modules, donation registry) lives in
+config.py so the analysis stays distinguishable from the convention.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from . import config
+from .callgraph import (
+    CallGraph,
+    FuncInfo,
+    ModuleScope,
+    dotted_name,
+    iter_body_nodes,
+    terminal_name,
+)
+from .engine import Finding, Module, Project
+
+# ---------------------------------------------------------------------------
+# shared resolution helpers
+# ---------------------------------------------------------------------------
+
+
+def qualify(dotted: str, scope: ModuleScope) -> str:
+    """Expand the leading import alias of a dotted path:
+    ``np.asarray`` -> ``numpy.asarray``, ``jnp.where`` -> ``jax.numpy.where``,
+    ``io_callback`` -> ``jax.experimental.io_callback``."""
+    head, _, rest = dotted.partition(".")
+    if head in scope.import_mods:
+        head = scope.import_mods[head]
+    elif head in scope.import_names:
+        mod, attr = scope.import_names[head]
+        head = f"{mod}.{attr}" if mod else attr
+    return f"{head}.{rest}" if rest else head
+
+
+def _call_qualname(node: ast.Call, scope: ModuleScope) -> Optional[str]:
+    d = dotted_name(node.func)
+    return qualify(d, scope) if d else None
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    module: Module
+    node: ast.ClassDef
+    is_dataclass: bool
+    frozen: bool
+    pytree_registered: bool
+
+
+def _decorator_terminal(dec: ast.expr) -> Optional[str]:
+    if isinstance(dec, ast.Call):
+        dec = dec.func
+    return terminal_name(dec)
+
+
+def class_index(project: Project) -> dict[str, dict[str, ClassInfo]]:
+    """{module name: {class name: ClassInfo}} with dataclass/frozen/pytree
+    registration facts. Registration counts via decorator
+    (``@jax.tree_util.register_pytree_node_class`` / ``register_dataclass``)
+    or a module-level ``register_pytree_node(Cls, ...)`` call."""
+    out: dict[str, dict[str, ClassInfo]] = {}
+    for module in project.modules:
+        classes: dict[str, ClassInfo] = {}
+        registered_by_call: set[str] = set()
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.Call):
+                t = terminal_name(node.func)
+                if t in ("register_pytree_node", "register_dataclass",
+                         "register_pytree_with_keys"):
+                    for arg in node.args[:1]:
+                        if isinstance(arg, ast.Name):
+                            registered_by_call.add(arg.id)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_dc = frozen = registered = False
+            for dec in node.decorator_list:
+                t = _decorator_terminal(dec)
+                if t == "dataclass":
+                    is_dc = True
+                    if isinstance(dec, ast.Call):
+                        for kw in dec.keywords:
+                            if (kw.arg == "frozen"
+                                    and isinstance(kw.value, ast.Constant)
+                                    and kw.value.value is True):
+                                frozen = True
+                elif t in ("register_pytree_node_class", "register_dataclass",
+                           "register_static"):
+                    registered = True
+            if node.name in registered_by_call:
+                registered = True
+            classes[node.name] = ClassInfo(
+                module=module, node=node, is_dataclass=is_dc,
+                frozen=frozen, pytree_registered=registered,
+            )
+        out[module.name] = classes
+    return out
+
+
+def resolve_class(
+    name_expr: ast.expr, module: Module, graph: CallGraph,
+    index: dict[str, dict[str, ClassInfo]],
+) -> Optional[ClassInfo]:
+    """Resolve ``Cls`` / ``mod.Cls`` to a project class, through imports."""
+    scope = graph.scopes.get(module.name)
+    if scope is None:
+        return None
+    if isinstance(name_expr, ast.Name):
+        local = index.get(module.name, {}).get(name_expr.id)
+        if local is not None:
+            return local
+        if name_expr.id in scope.import_names:
+            mod, attr = scope.import_names[name_expr.id]
+            return index.get(mod, {}).get(attr)
+    elif isinstance(name_expr, ast.Attribute) and isinstance(name_expr.value, ast.Name):
+        target = scope.import_mods.get(name_expr.value.id)
+        if target:
+            return index.get(target, {}).get(name_expr.attr)
+    return None
+
+
+def _pos(node: ast.AST) -> tuple[int, int]:
+    return (getattr(node, "lineno", 0), getattr(node, "col_offset", 0))
+
+
+def _end_pos(node: ast.AST) -> tuple[int, int]:
+    return (
+        getattr(node, "end_lineno", getattr(node, "lineno", 0)),
+        getattr(node, "end_col_offset", getattr(node, "col_offset", 0)),
+    )
+
+
+def _finding(module: Module, node: ast.AST, code: str, message: str) -> Finding:
+    return Finding(
+        path=module.rel, line=getattr(node, "lineno", 1),
+        col=getattr(node, "col_offset", 0), rule=code, message=message,
+    )
+
+
+# ---------------------------------------------------------------------------
+# JL001 — host syncs inside the traced surface
+# ---------------------------------------------------------------------------
+
+
+def _is_static_expr(expr: ast.AST) -> bool:
+    """True when an expression is trace-time metadata (shape/rank/dtype math),
+    so ``int()``/``float()``/``bool()`` on it is NOT a device sync."""
+    if isinstance(expr, ast.Constant):
+        return True
+    if isinstance(expr, ast.Attribute):
+        return expr.attr in config.STATIC_SCALAR_ATTRS
+    if isinstance(expr, ast.Subscript):
+        return _is_static_expr(expr.value)          # x.shape[0]
+    if isinstance(expr, ast.Call):
+        return terminal_name(expr.func) == "len"
+    if isinstance(expr, ast.BinOp):
+        return _is_static_expr(expr.left) and _is_static_expr(expr.right)
+    if isinstance(expr, ast.UnaryOp):
+        return _is_static_expr(expr.operand)
+    if isinstance(expr, ast.Compare):
+        return _is_static_expr(expr.left) and all(
+            _is_static_expr(c) for c in expr.comparators
+        )
+    return False
+
+
+class HostSyncInTracedCode:
+    code = "JL001"
+    summary = "host-sync primitive inside the jit-traced surface"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph: CallGraph = project.callgraph
+        findings: list[Finding] = []
+        for info in sorted(graph.traced_functions(), key=lambda f: f.qualname):
+            scope = graph.scopes[info.module.name]
+            for node in iter_body_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                f = self._check_call(node, scope, info)
+                if f is not None:
+                    findings.append(_finding(info.module, node, self.code, f))
+        return findings
+
+    def _check_call(
+        self, node: ast.Call, scope: ModuleScope, info: FuncInfo
+    ) -> Optional[str]:
+        where = f"(traced via {info.qualname})"
+        # x.item() — the canonical device sync
+        if (isinstance(node.func, ast.Attribute) and node.func.attr == "item"
+                and not node.args and not node.keywords):
+            return f".item() forces a host sync {where}"
+        qual = _call_qualname(node, scope)
+        if qual in ("jax.device_get", "jax.block_until_ready"):
+            return f"{qual}() forces a host sync {where}"
+        if qual is not None and qual.split(".", 1)[0] == "numpy" \
+                and qual.endswith((".asarray", ".array")):
+            return (
+                f"{qual}() materializes a device value on host {where}; "
+                "use jnp inside traced code"
+            )
+        # float()/int()/bool() on anything that is not static metadata
+        if (isinstance(node.func, ast.Name)
+                and node.func.id in ("float", "int", "bool")
+                and len(node.args) == 1 and not node.keywords
+                and not _is_static_expr(node.args[0])):
+            return (
+                f"{node.func.id}() on a (potential) tracer forces a host "
+                f"sync {where}; keep the value on device or branch on "
+                "static metadata only"
+            )
+        return None
+
+
+# ---------------------------------------------------------------------------
+# JL002 — Python control flow on tracer values
+# ---------------------------------------------------------------------------
+
+
+class TracerControlFlow:
+    code = "JL002"
+    summary = "Python control flow branching on a tracer value"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph: CallGraph = project.callgraph
+        findings: list[Finding] = []
+        for info in sorted(graph.traced_functions(), key=lambda f: f.qualname):
+            scope = graph.scopes[info.module.name]
+            for node in iter_body_nodes(info.node):
+                test = None
+                kind = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test, kind = node.test, type(node).__name__.lower()
+                elif isinstance(node, ast.IfExp):
+                    test, kind = node.test, "conditional expression"
+                elif isinstance(node, ast.Assert):
+                    test, kind = node.test, "assert"
+                if test is None:
+                    continue
+                culprit = self._tracer_call_in(test, scope)
+                if culprit is not None:
+                    findings.append(_finding(
+                        info.module, node, self.code,
+                        f"{kind} branches on tracer-valued `{culprit}` "
+                        f"(traced via {info.qualname}); use lax.cond/"
+                        "lax.select/jnp.where",
+                    ))
+        return findings
+
+    def _tracer_call_in(self, test: ast.AST, scope: ModuleScope) -> Optional[str]:
+        for node in ast.walk(test):
+            if not isinstance(node, ast.Call):
+                continue
+            raw = dotted_name(node.func)
+            if raw and "." in raw:
+                root = raw.split(".", 1)[0]
+                if root in scope.import_mods or root in scope.import_names:
+                    # a module-level function call: tracer-valued iff jax
+                    qual = qualify(raw, scope)
+                    if qual.split(".", 1)[0] in config.JAX_MODULE_ROOTS:
+                        return qual
+                    continue
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in config.REDUCTION_METHOD_NAMES):
+                src = raw or f"<expr>.{node.func.attr}"
+                return f"{src}()"
+        return None
+
+
+# ---------------------------------------------------------------------------
+# JL003 — donated buffers read after the call
+# ---------------------------------------------------------------------------
+
+
+def _donation_map(module: Module) -> dict[str, tuple[int, ...]]:
+    """Terminal callable name -> donated positions, from literal
+    ``jax.jit(..., donate_argnums=(...))`` assignments in this module plus
+    the config registry (for computed donate_argnums)."""
+    out: dict[str, tuple[int, ...]] = dict(config.DONATED_CALLABLES)
+    for node in ast.walk(module.tree):
+        if not isinstance(node, ast.Assign):
+            continue
+        call = node.value
+        if not (isinstance(call, ast.Call)
+                and terminal_name(call.func) == "jit"):
+            continue
+        donated: tuple[int, ...] = ()
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums" and isinstance(
+                kw.value, (ast.Tuple, ast.List)
+            ):
+                donated = tuple(
+                    e.value for e in kw.value.elts
+                    if isinstance(e, ast.Constant) and isinstance(e.value, int)
+                )
+        if not donated:
+            continue
+        for target in node.targets:
+            t = terminal_name(target)
+            if t:
+                out[t] = donated
+    return out
+
+
+class DonatedBufferReuse:
+    code = "JL003"
+    summary = "donated jit buffer read after the donating call"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph: CallGraph = project.callgraph
+        findings: list[Finding] = []
+        for module in project.modules:
+            donated = _donation_map(module)
+            for info in graph.funcs.values():
+                if info.module is not module:
+                    continue
+                findings.extend(self._check_function(module, info, donated))
+        return findings
+
+    def _check_function(
+        self, module: Module, info: FuncInfo, donated: dict[str, tuple[int, ...]]
+    ) -> list[Finding]:
+        # (call end position, donated arg dotted path, callable name)
+        donations: list[tuple[tuple[int, int], str, str]] = []
+        body = list(iter_body_nodes(info.node))
+        for node in body:
+            if not isinstance(node, ast.Call):
+                continue
+            callee = terminal_name(node.func)
+            if callee not in donated:
+                continue
+            for idx in donated[callee]:
+                if idx >= len(node.args):
+                    continue
+                path = dotted_name(node.args[idx])
+                if path:
+                    donations.append((_end_pos(node), path, callee))
+        if not donations:
+            return []
+
+        rebinds: list[tuple[tuple[int, int], str]] = []
+        for node in body:
+            targets: list[ast.expr] = []
+            if isinstance(node, ast.Assign):
+                targets = node.targets
+            elif isinstance(node, (ast.AugAssign, ast.AnnAssign, ast.For)):
+                targets = [node.target]
+            elif isinstance(node, ast.NamedExpr):
+                targets = [node.target]
+            for t in targets:
+                for el in ast.walk(t):
+                    d = dotted_name(el)
+                    if d:
+                        # a rebind takes effect at statement END: in
+                        # `x = f(x.a)` the RHS call precedes the bind
+                        rebinds.append((_end_pos(node), d))
+
+        findings: list[Finding] = []
+        for node in body:
+            if not isinstance(node, (ast.Name, ast.Attribute)):
+                continue
+            if not isinstance(getattr(node, "ctx", None), ast.Load):
+                continue
+            d = dotted_name(node)
+            if d is None:
+                continue
+            for call_end, path, callee in donations:
+                if d != path or _pos(node) <= call_end:
+                    continue
+                # a rebind of the path (or of any prefix, e.g. the whole
+                # `state` object) between the call and this read clears it
+                root_prefixes = {path}
+                parts = path.split(".")
+                for i in range(1, len(parts)):
+                    root_prefixes.add(".".join(parts[:i]))
+                cleared = any(
+                    call_end < rp <= _pos(node) and rd in root_prefixes
+                    for rp, rd in rebinds
+                )
+                if not cleared:
+                    findings.append(_finding(
+                        module, node, self.code,
+                        f"`{d}` was donated to `{callee}()` (its buffer is "
+                        "invalid after the call) but is read again without "
+                        "re-binding",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL004 — static jit args must be hashable frozen dataclasses
+# ---------------------------------------------------------------------------
+
+_UNHASHABLE_LITERALS = (
+    ast.Dict, ast.List, ast.Set, ast.ListComp, ast.SetComp, ast.DictComp,
+    ast.GeneratorExp,
+)
+
+
+def _static_argnames(call: ast.Call) -> frozenset[str]:
+    for kw in call.keywords:
+        if kw.arg == "static_argnames" and isinstance(
+            kw.value, (ast.Tuple, ast.List)
+        ):
+            return frozenset(
+                e.value for e in kw.value.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)
+            )
+        if kw.arg == "static_argnames" and isinstance(kw.value, ast.Constant) \
+                and isinstance(kw.value.value, str):
+            return frozenset({kw.value.value})
+    return frozenset()
+
+
+def _static_callables(module: Module) -> dict[str, frozenset[str]]:
+    """Terminal callable name -> static argnames, from ``x = jax.jit(f,
+    static_argnames=...)`` assignments and ``@functools.partial(jax.jit,
+    static_argnames=...)`` decorators."""
+    out: dict[str, frozenset[str]] = {}
+    for node in ast.walk(module.tree):
+        if isinstance(node, ast.Assign):
+            call = node.value
+            if isinstance(call, ast.Call) and terminal_name(call.func) == "jit":
+                statics = _static_argnames(call)
+                if statics:
+                    for target in node.targets:
+                        t = terminal_name(target)
+                        if t:
+                            out[t] = statics
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if (isinstance(dec, ast.Call)
+                        and terminal_name(dec.func) == "partial"
+                        and any(terminal_name(a) == "jit" for a in dec.args)):
+                    statics = _static_argnames(dec)
+                    if statics:
+                        out[node.name] = statics
+    return out
+
+
+class StaticArgContract:
+    code = "JL004"
+    summary = "static jit arg is not a hashable frozen dataclass"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph: CallGraph = project.callgraph
+        index = class_index(project)
+        findings: list[Finding] = []
+        # 1. the contract class itself must be a frozen dataclass
+        for classes in index.values():
+            info = classes.get(config.TRANSFORM_CLASS_NAME)
+            if info is None:
+                continue
+            if not (info.is_dataclass and info.frozen):
+                findings.append(_finding(
+                    info.module, info.node, self.code,
+                    f"{config.TRANSFORM_CLASS_NAME} is passed as a static "
+                    "jit arg and must be @dataclass(frozen=True) "
+                    "(hashability is the jit cache key)",
+                ))
+        # 2. values passed for known static argnames at call sites
+        for module in project.modules:
+            statics = _static_callables(module)
+            if not statics:
+                continue
+            for node in ast.walk(module.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                callee = terminal_name(node.func)
+                if callee not in statics:
+                    continue
+                for kw in node.keywords:
+                    if kw.arg not in statics[callee]:
+                        continue
+                    findings.extend(self._check_static_value(
+                        module, graph, index, callee, kw
+                    ))
+        return findings
+
+    def _check_static_value(self, module, graph, index, callee, kw):
+        if isinstance(kw.value, _UNHASHABLE_LITERALS):
+            return [_finding(
+                module, kw.value, self.code,
+                f"static jit arg `{kw.arg}` of `{callee}()` is an unhashable "
+                f"{type(kw.value).__name__.lower()} literal; use a frozen "
+                "dataclass or tuple",
+            )]
+        if isinstance(kw.value, ast.Call):
+            cls = resolve_class(kw.value.func, module, graph, index)
+            if cls is not None and cls.is_dataclass and not cls.frozen:
+                return [_finding(
+                    module, kw.value, self.code,
+                    f"static jit arg `{kw.arg}` of `{callee}()` is a "
+                    f"non-frozen dataclass {cls.node.name}; mutable "
+                    "dataclasses are unhashable",
+                )]
+        return []
+
+
+# ---------------------------------------------------------------------------
+# JL005 — unregistered dataclasses in pytree positions
+# ---------------------------------------------------------------------------
+
+
+class UnregisteredPytreeDataclass:
+    code = "JL005"
+    summary = "dataclass used as a pytree without tree_util registration"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph: CallGraph = project.callgraph
+        index = class_index(project)
+        findings: list[Finding] = []
+        traced = graph.traced_functions()
+        # constructed inside traced code => it crosses the jit boundary as
+        # (part of) an output pytree
+        for info in sorted(traced, key=lambda f: f.qualname):
+            for node in iter_body_nodes(info.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                cls = resolve_class(node.func, info.module, graph, index)
+                if cls is not None and cls.is_dataclass \
+                        and not cls.pytree_registered:
+                    findings.append(_finding(
+                        info.module, node, self.code,
+                        f"dataclass {cls.node.name} is constructed inside "
+                        f"traced code ({info.qualname}) but is not "
+                        "registered with jax.tree_util; jit will treat it "
+                        "as an opaque leaf",
+                    ))
+        # passed straight into a tree op anywhere
+        for module in project.modules:
+            for node in ast.walk(module.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                if terminal_name(node.func) not in config.TREE_OP_NAMES:
+                    continue
+                for arg in node.args:
+                    if not isinstance(arg, ast.Call):
+                        continue
+                    cls = resolve_class(arg.func, module, graph, index)
+                    if cls is not None and cls.is_dataclass \
+                            and not cls.pytree_registered:
+                        findings.append(_finding(
+                            module, arg, self.code,
+                            f"dataclass {cls.node.name} is passed to "
+                            f"{terminal_name(node.func)}() without "
+                            "jax.tree_util registration",
+                        ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL006 — host callbacks outside the approved timing modules
+# ---------------------------------------------------------------------------
+
+
+class CallbackOutsideTimingModules:
+    code = "JL006"
+    summary = "host callback outside the approved timing modules"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph: CallGraph = project.callgraph
+        findings: list[Finding] = []
+        for module in project.modules:
+            if module.rel.endswith(config.APPROVED_CALLBACK_MODULE_SUFFIXES):
+                continue
+            scope = graph.scopes[module.name]
+            for node in ast.walk(module.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                qual = _call_qualname(node, scope)
+                bare = isinstance(node.func, ast.Name) and node.func.id
+                hit = (
+                    qual in config.CALLBACK_QUALNAMES
+                    or (bare and bare in config.CALLBACK_BARE_NAMES
+                        and scope.import_names.get(bare, ("",))[0]
+                        .startswith("jax"))
+                )
+                if hit:
+                    findings.append(_finding(
+                        module, node, self.code,
+                        f"{qual or bare}() is a hidden host round-trip; "
+                        "host callbacks belong in "
+                        f"{', '.join(config.APPROVED_CALLBACK_MODULE_SUFFIXES)} "
+                        "(inline-disable with a reason if intentional)",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL007 — checkpoint payload completeness
+# ---------------------------------------------------------------------------
+
+
+def _dict_literal_keys(func: ast.AST, var: str) -> Optional[set[str]]:
+    """Keys of ``var = {...literal...}`` inside ``func`` plus any later
+    ``var["k"] = ...`` augmentations; None when no literal assignment."""
+    keys: Optional[set[str]] = None
+    for node in ast.walk(func):
+        if isinstance(node, ast.Assign) and isinstance(node.value, ast.Dict):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id == var:
+                    keys = {
+                        k.value for k in node.value.keys
+                        if isinstance(k, ast.Constant) and isinstance(k.value, str)
+                    }
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Subscript)
+                        and isinstance(t.value, ast.Name) and t.value.id == var
+                        and isinstance(t.slice, ast.Constant)
+                        and isinstance(t.slice.value, str)):
+                    if keys is not None:
+                        keys.add(t.slice.value)
+    return keys
+
+
+def _subscript_reads(func: ast.AST, var_names: tuple[str, ...]) -> set[str]:
+    reads: set[str] = set()
+    for node in ast.walk(func):
+        if (isinstance(node, ast.Subscript)
+                and isinstance(node.value, ast.Name)
+                and node.value.id in var_names
+                and isinstance(node.ctx, ast.Load)
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, str)):
+            reads.add(node.slice.value)
+    return reads
+
+
+def _dataclass_fields(cls: ast.ClassDef) -> set[str]:
+    fields: set[str] = set()
+    for stmt in cls.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target, ast.Name):
+            fields.add(stmt.target.id)
+    return fields
+
+
+class CheckpointPayloadCompleteness:
+    code = "JL007"
+    summary = "checkpoint payload/restore/state field sets disagree"
+
+    def run(self, project: Project) -> list[Finding]:
+        index = class_index(project)
+        findings: list[Finding] = []
+        for module in project.modules:
+            payload = restore = None
+            for node in ast.walk(module.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    if node.name == config.CHECKPOINT_PAYLOAD_NAME:
+                        payload = node
+                    elif node.name == config.CHECKPOINT_RESTORE_NAME:
+                        restore = node
+            if payload is None or restore is None:
+                continue
+            findings.extend(self._check_pair(module, index, payload, restore))
+        return findings
+
+    def _check_pair(self, module, index, payload, restore):
+        findings: list[Finding] = []
+        tree_keys = _dict_literal_keys(payload, config.PAYLOAD_TREE_VAR)
+        meta_keys = _dict_literal_keys(payload, config.PAYLOAD_META_VAR) or set()
+        like_keys = _dict_literal_keys(restore, config.RESTORE_LIKE_VAR)
+        if tree_keys is None or like_keys is None:
+            return findings  # convention not followed here; nothing to check
+        for k in sorted(tree_keys - like_keys):
+            findings.append(_finding(
+                module, restore, self.code,
+                f"payload serializes tree[{k!r}] but "
+                f"{config.CHECKPOINT_RESTORE_NAME}'s "
+                f"`{config.RESTORE_LIKE_VAR}` template omits it (the loader "
+                "will drop it silently)",
+            ))
+        for k in sorted(like_keys - tree_keys):
+            findings.append(_finding(
+                module, restore, self.code,
+                f"restore template expects tree[{k!r}] but "
+                f"{config.CHECKPOINT_PAYLOAD_NAME} never writes it",
+            ))
+        reads = _subscript_reads(restore, config.RESTORE_TREE_VARS)
+        for k in sorted(tree_keys - reads):
+            findings.append(_finding(
+                module, restore, self.code,
+                f"tree[{k!r}] is serialized and loaded but never read in "
+                f"{config.CHECKPOINT_RESTORE_NAME} — restored state loses it",
+            ))
+        state = index.get(module.name, {}).get(config.STATE_CLASS_NAME)
+        if state is not None:
+            fields = _dataclass_fields(state.node)
+            covered = tree_keys | meta_keys | config.STATE_FIELD_EXEMPTIONS
+            for k in sorted(fields - covered):
+                findings.append(_finding(
+                    module, payload, self.code,
+                    f"{config.STATE_CLASS_NAME}.{k} is not serialized by "
+                    f"{config.CHECKPOINT_PAYLOAD_NAME} (neither tree nor "
+                    "metadata) — restores will silently reset it",
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+RULES: dict[str, type] = {
+    r.code: r
+    for r in (
+        HostSyncInTracedCode,
+        TracerControlFlow,
+        DonatedBufferReuse,
+        StaticArgContract,
+        UnregisteredPytreeDataclass,
+        CallbackOutsideTimingModules,
+        CheckpointPayloadCompleteness,
+    )
+}

@@ -1,0 +1,86 @@
+"""RetraceSentinel: the runtime complement to the static rules.
+
+jaxlint's JL rules prove properties of the *source*; the sentinel asserts
+the property the paper's hot loop actually depends on at *runtime* — that a
+region of code compiles at most ``budget`` new XLA programs (DESIGN.md §6:
+steady-state mega-batches and revisited-population resizes must hit the jit
+cache, budget 0).
+
+Implementation: jax publishes a ``/jax/core/compile/backend_compile_duration``
+monitoring event for every backend compile (cache hits publish nothing), so
+counting those events inside the ``with`` block counts fresh compilations —
+including ones hidden behind ``shard_map``/``scan`` wrappers that
+``trainer.compile_cache_size()`` style cache introspection can miss. The
+listener registry lives in ``jax._src.monitoring``; this module is therefore
+the one jax-importing part of tools/jaxlint and is deliberately not imported
+by the CLI (the CI lint job has no jax).
+"""
+from __future__ import annotations
+
+from jax._src import monitoring as _monitoring
+
+#: the event jax's pjit/xla_bridge layer records once per backend compile
+COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+class RetraceBudgetExceeded(AssertionError):
+    """More fresh compilations happened than the declared budget allows."""
+
+
+class RetraceSentinel:
+    """Count XLA compilations inside a ``with`` block and enforce a budget.
+
+    >>> with RetraceSentinel(budget=0) as sentinel:
+    ...     trainer.run_megabatch(state)       # must hit the jit cache
+    >>> sentinel.count
+    0
+
+    ``budget=None`` only counts (never raises). The check is skipped when
+    the body raises, so the sentinel never masks the original failure.
+    """
+
+    def __init__(self, budget: int | None = 0, label: str = ""):
+        if budget is not None and budget < 0:
+            raise ValueError(f"budget must be >= 0 or None, got {budget}")
+        if not hasattr(_monitoring, "register_event_duration_secs_listener"):
+            raise RuntimeError(
+                "this jax build exposes no monitoring-event listener API; "
+                "RetraceSentinel cannot count compilations"
+            )
+        self.budget = budget
+        self.label = label
+        self.count = 0
+        self._active = False
+
+    def _on_event(self, event: str, duration: float, **kwargs) -> None:
+        if self._active and event == COMPILE_EVENT:
+            self.count += 1
+
+    def __enter__(self) -> "RetraceSentinel":
+        self.count = 0
+        self._active = True
+        _monitoring.register_event_duration_secs_listener(self._on_event)
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self._active = False
+        self._unregister()
+        if exc_type is None and self.budget is not None \
+                and self.count > self.budget:
+            what = f" [{self.label}]" if self.label else ""
+            raise RetraceBudgetExceeded(
+                f"RetraceSentinel{what}: {self.count} fresh XLA "
+                f"compilation(s) inside the guarded block, budget "
+                f"{self.budget} — a shape/static-arg change is defeating "
+                "the jit cache (DESIGN.md §6)"
+            )
+
+    def _unregister(self) -> None:
+        unreg = getattr(
+            _monitoring, "_unregister_event_duration_listener_by_callback",
+            None,
+        )
+        if unreg is not None:
+            unreg(self._on_event)
+        else:  # very old/new jax: at worst the dead listener stays inert
+            self._active = False
