@@ -246,10 +246,16 @@ class CheckpointManager:
     A writer-thread failure is re-raised on the next ``maybe_save``/
     ``wait`` call — checkpointing errors must fail the run, not vanish
     into a daemon thread.
+
+    Multi-host single-writer rule (DESIGN.md §10): every process builds
+    the payload — under a host span ``checkpoint_payload`` contains a
+    collective allgather, so all processes must call it on the identical
+    interval — but only the manager constructed with ``publisher=True``
+    (process 0 by convention) writes bytes to disk.
     """
 
     def __init__(self, directory: str, every: int = 1, retain: int = 3,
-                 async_write: bool = True):
+                 async_write: bool = True, publisher: bool = True):
         if every < 1:
             raise ValueError(f"checkpoint interval must be >= 1, got {every}")
         if retain < 1:
@@ -258,6 +264,7 @@ class CheckpointManager:
         self.every = int(every)
         self.retain = int(retain)
         self.async_write = bool(async_write)
+        self.publisher = bool(publisher)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
         self._last_saved: Optional[int] = None
@@ -279,12 +286,18 @@ class CheckpointManager:
             return None
         self._reraise()
         tree, meta = trainer.checkpoint_payload(state)
+        # recorded before the publisher gate so repeat calls at the same
+        # index dedupe identically on every process (exchange lockstep)
+        self._last_saved = idx
+        if not self.publisher:
+            # non-publishing process: the payload call above kept us in
+            # exchange lockstep with the writer; nothing touches disk
+            return None
         # host-materialize NOW: np.array copies device buffers and the
         # trainer's mutable host arrays (b/lr/clock) alike, so the write
         # job owns an immutable snapshot
         snapshot = jax.tree_util.tree_map(lambda l: np.array(l), tree)
         path = self.step_path(idx)
-        self._last_saved = idx
         if self.async_write:
             self.wait()           # <= one write in flight
             self._thread = threading.Thread(

@@ -200,6 +200,15 @@ class Algorithm:
     #:                a resize request degenerates to a no-op).
     resize_policy: str = "merge"
 
+    #: True when the algorithm reduces across replicas *inside* the jitted
+    #: round body (``axis_name`` collectives in round_transforms — sync's
+    #: gradient mean, CROSSBOW's center). A host-mode multi-host span
+    #: (DESIGN.md §10) only exchanges at the mega-batch barrier, so an
+    #: in-round collective would silently reduce over the local slot block
+    #: alone; the trainer rejects spanning such algorithms at launch.
+    #: Device spans are unaffected — there the mesh itself is global.
+    round_collectives: bool = False
+
     # ---- state ----
     def init_state_extras(self, cfg, params, keep_global_copies: bool) -> StateExtras:
         # paper: initialize at b_max (Fig. 10a)

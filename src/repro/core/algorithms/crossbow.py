@@ -45,6 +45,10 @@ class Crossbow(Algorithm):
     #: survivors keep their own parameters (DESIGN.md §6).
     resize_policy = "preserve"
 
+    #: the center w̄ averages the whole population every round — a host
+    #: span cannot bridge that at mega-batch grain
+    round_collectives = True
+
     def round_transforms(self, cfg):
         c = cfg.crossbow_correction
         axis = replica_axis_name(cfg)

@@ -62,6 +62,9 @@ def masked_mean_grads(grads, update_mask, axis_name=None):
 class DelayedSyncAdaptiveBatch(Algorithm):
     # state init: the base default (b = b_max everywhere, no global copies)
 
+    #: masked gradient mean psums across replicas every round
+    round_collectives = True
+
     def plan(self, scheduler, state, mega_samples, fetch_fn):
         return self._plan_dynamic(scheduler, state, mega_samples, fetch_fn)
 

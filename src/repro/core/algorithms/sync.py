@@ -41,6 +41,10 @@ def mean_grads(grads, update_mask, axis_name=None):
 
 @register("sync")
 class GradientAggregation(Algorithm):
+    #: the gradient mean psums across replicas every round — a host span
+    #: cannot bridge that at mega-batch grain (base.Algorithm docstring)
+    round_collectives = True
+
     def init_state_extras(self, cfg, params, keep_global_copies):
         b0 = max(cfg.b_min, cfg.b_max // cfg.n_replicas)
         return StateExtras(b=np.full(cfg.n_replicas, float(b0)))

@@ -37,12 +37,24 @@ probabilistic events from ``np.random.default_rng((seed, mega_batch))`` —
 keyed by position, not draw history — and scripted schedules fire at exact
 mega-batch indices, so tests, the chaos CI job, and the faults benchmark
 replay identical event sequences.
+
+The injector is the *test harness*; production liveness is the
+:class:`HeartbeatMonitor` (DESIGN.md §10): each process renews a lease
+file under the shared fleet directory, and the monitor turns a lease that
+stops changing into the same ``FaultEvent`` stream — missed deadline →
+``crash``, announced departure → ``preempt``, lease resumed after backoff
+→ ``join`` — so ``FleetController`` consumes real signals through the
+exact code path the injector exercises deterministically in tests.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import threading
+import time
 from dataclasses import dataclass, field
-from typing import Optional
+from typing import Any, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -62,12 +74,15 @@ class FaultEvent:
     events default to the tail slot, probabilistic draws pick uniformly).
     ``duration`` — mega-batches of absence (preempt) / slowdown (stall).
     ``severity`` — stall slowdown multiplier on the simulated speed factor.
+    ``process`` — set by the HeartbeatMonitor: the event targets a whole
+    *process* (all of its replica slots at once) rather than one slot.
     """
 
     kind: str
     replica: Optional[int] = None
     duration: int = 2
     severity: float = 4.0
+    process: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in FAULT_KINDS:
@@ -170,6 +185,239 @@ def parse_fault_spec(spec: str) -> FaultInjector:
     )
 
 
+# ---------------------------------------------------------------------------
+# heartbeat leases (DESIGN.md §10)
+
+LEASE_PREFIX = "proc-"
+LEASE_STATUSES = ("live", "leaving", "done")
+
+
+def write_lease(leases_dir: str, process_id: int, counter: int,
+                status: str = "live", megabatch: Optional[int] = None) -> str:
+    """Atomically publish one process's lease (tmp + rename, so readers
+    never see a partial write). Returns the lease path."""
+    if status not in LEASE_STATUSES:
+        raise ValueError(f"unknown lease status {status!r}")
+    payload = {"process": int(process_id), "counter": int(counter),
+               "status": status}
+    if megabatch is not None:
+        payload["megabatch"] = int(megabatch)
+    path = os.path.join(leases_dir, f"{LEASE_PREFIX}{int(process_id)}.json")
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)
+    return path
+
+
+def read_leases(leases_dir: str) -> dict[int, dict]:
+    """All parseable leases under ``leases_dir``: {process_id: payload}."""
+    out: dict[int, dict] = {}
+    try:
+        names = os.listdir(leases_dir)
+    except FileNotFoundError:
+        return out
+    for name in names:
+        if not (name.startswith(LEASE_PREFIX) and name.endswith(".json")):
+            continue
+        try:
+            with open(os.path.join(leases_dir, name)) as f:
+                payload = json.load(f)
+            out[int(payload["process"])] = payload
+        except (OSError, ValueError, KeyError):
+            continue  # racing writer or stray file; next observe sees it
+    return out
+
+
+class HeartbeatMonitor:
+    """Lease-file liveness: the production signal source for
+    :class:`FleetController` (DESIGN.md §10).
+
+    Every process renews ``<fleet_dir>/leases/proc-<id>.json`` (an
+    incrementing counter plus a status and the last completed mega-batch);
+    the monitor watches *content changes*, not embedded timestamps, so
+    liveness needs no clock sync between machines sharing the directory —
+    a peer is stale when its lease hasn't changed for ``grace`` seconds of
+    the local ``clock``. The clock is injectable, so every timing behavior
+    is unit-testable without real sleeps.
+
+    ``poll(mb)`` translates observations into the injector-shaped
+    ``FaultEvent`` stream: stale or tombstoned → ``crash``; status
+    ``'leaving'`` → ``preempt`` (spot semantics); a dead peer whose lease
+    resumes changing → ``join``, but only ``rejoin_backoff`` mega-batches
+    after its eviction (flap damping); status ``'done'`` is a clean exit,
+    never an event. Tombstones (``<fleet_dir>/condemned/p<id>``, written
+    by the host-span exchange or by :meth:`note_condemned`) are
+    authoritative: a condemned peer is a crash even if its lease looks
+    fresh, and a condemned *self* raises — a paused-then-resumed process
+    whose peers already evicted it must not keep contributing.
+
+    ``slot_map`` optionally maps process ids to replica slots for
+    consumers whose trainer has no spanning context of its own.
+    """
+
+    def __init__(self, fleet_dir: str, process_id: Optional[int] = None,
+                 interval: float = 0.5, grace: float = 3.0,
+                 rejoin_backoff: int = 2, clock=time.monotonic,
+                 slot_map: Optional[dict[int, list[int]]] = None):
+        self.fleet_dir = fleet_dir
+        self.leases_dir = os.path.join(fleet_dir, "leases")
+        self.tombs_dir = os.path.join(fleet_dir, "condemned")
+        os.makedirs(self.leases_dir, exist_ok=True)
+        os.makedirs(self.tombs_dir, exist_ok=True)
+        self.process_id = process_id
+        self.interval = float(interval)
+        self.grace = float(grace)
+        self.rejoin_backoff = int(rejoin_backoff)
+        self.clock = clock
+        self.slot_map = slot_map
+        self._counter = 0
+        self._megabatch = 0
+        self._lock = threading.Lock()
+        # pid -> [counter, status, changed_at (local clock), payload]
+        self._seen: dict[int, list] = {}
+        self._dead: dict[int, int] = {}      # pid -> eviction mega-batch
+        self._finished: set[int] = set()
+        self._condemned_cache: set[int] = set()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- own lease -----------------------------------------------------
+    def renew(self, megabatch: Optional[int] = None,
+              status: str = "live") -> None:
+        if self.process_id is None:
+            return
+        with self._lock:
+            self._counter += 1
+            if megabatch is not None:
+                self._megabatch = int(megabatch)
+            write_lease(self.leases_dir, self.process_id, self._counter,
+                        status=status, megabatch=self._megabatch)
+
+    def start(self) -> None:
+        """Renew in a daemon thread every ``interval`` seconds, so long
+        device steps (first-compile mega-batches) can't starve liveness."""
+        if self._thread is not None:
+            return
+
+        def _loop():
+            while not self._stop.wait(self.interval):
+                self.renew()
+
+        self._thread = threading.Thread(
+            target=_loop, name="heartbeat-renew", daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    # -- observation ---------------------------------------------------
+    def observe(self) -> None:
+        """Refresh the lease table; a content change resets the peer's
+        staleness clock (at *this* process's clock — no skew assumptions)."""
+        now = self.clock()
+        for pid, payload in read_leases(self.leases_dir).items():
+            rec = self._seen.get(pid)
+            counter = payload.get("counter")
+            status = payload.get("status", "live")
+            if rec is None or rec[0] != counter or rec[1] != status:
+                self._seen[pid] = [counter, status, now, payload]
+
+    def condemned_ids(self) -> set[int]:
+        try:
+            names = os.listdir(self.tombs_dir)
+        except FileNotFoundError:
+            names = []
+        self._condemned_cache = {
+            int(n[1:]) for n in names if n.startswith("p")
+        } | self._condemned_cache
+        return set(self._condemned_cache)
+
+    def note_condemned(self, pid: int) -> None:
+        self._condemned_cache.add(int(pid))
+
+    def peer_fresh(self, pid: int) -> bool:
+        """Is this peer's lease still changing? (Exchange wait predicate:
+        False means stop waiting for its contributions.)"""
+        self.observe()
+        rec = self._seen.get(pid)
+        if rec is None:
+            return False
+        if rec[1] == "done":
+            return False
+        return (self.clock() - rec[2]) <= self.grace
+
+    def live_processes(self) -> set[int]:
+        self.observe()
+        now = self.clock()
+        condemned = self.condemned_ids()
+        return {
+            pid
+            for pid, rec in self._seen.items()
+            if rec[1] != "done"
+            and pid not in condemned
+            and (now - rec[2]) <= self.grace
+        }
+
+    def mark_dead(self, pid: int, mb: int) -> None:
+        """Record an eviction decided elsewhere (e.g. by exchange-agreed
+        peer observation) so poll() doesn't re-report it."""
+        self._dead.setdefault(int(pid), int(mb))
+
+    def last_megabatch(self, pid: int) -> Optional[int]:
+        rec = self._seen.get(pid)
+        return None if rec is None else rec[3].get("megabatch")
+
+    # -- the event source ----------------------------------------------
+    def poll(self, mb: int) -> list[FaultEvent]:
+        """Observations → injector-shaped events for this boundary."""
+        self.observe()
+        now = self.clock()
+        condemned = self.condemned_ids()
+        if self.process_id is not None and self.process_id in condemned:
+            raise RuntimeError(
+                f"process {self.process_id} was condemned by a fleet peer "
+                "(heartbeat lease went stale); restart to rejoin"
+            )
+        events: list[FaultEvent] = []
+        for pid in sorted(self._seen):
+            if pid == self.process_id or pid in self._finished:
+                continue
+            rec = self._seen[pid]
+            status = rec[1]
+            if pid in self._dead:
+                # rejoin-after-backoff: the lease must be changing again
+                if (
+                    pid not in condemned
+                    and status == "live"
+                    and (now - rec[2]) <= self.grace
+                    and mb - self._dead[pid] >= self.rejoin_backoff
+                ):
+                    del self._dead[pid]
+                    events.append(FaultEvent("join", process=pid))
+                continue
+            if status == "done":
+                self._finished.add(pid)
+                continue
+            stale = (now - rec[2]) > self.grace
+            if pid in condemned or stale:
+                events.append(FaultEvent("crash", process=pid))
+                self._dead[pid] = int(mb)
+            elif status == "leaving":
+                events.append(
+                    FaultEvent(
+                        "preempt", process=pid,
+                        duration=rec[3].get("duration", 2),
+                    )
+                )
+                self._dead[pid] = int(mb)
+        return events
+
+
 @dataclass
 class _Quarantined:
     """One absent worker awaiting readmission."""
@@ -210,6 +458,7 @@ class FleetController:
     """
 
     injector: Optional[FaultInjector] = None
+    monitor: Optional[Any] = None
     min_replicas: int = 1
     max_replicas: Optional[int] = None
     timeout_factor: float = 0.0
@@ -226,6 +475,24 @@ class FleetController:
     # ------------------------------------------------------------------
     def step(self, trainer, state, mb: int):
         elastic = getattr(trainer.algo, "resize_policy", "merge") != "fixed"
+        span = getattr(trainer, "_span", None)
+
+        # 0. heartbeat liveness (DESIGN.md §10): renew our lease with the
+        # progress the runner/peers key off, then turn peer observations
+        # into the same event stream the injector produces. Under a
+        # spanning trainer the proposals are exchange-agreed first, so
+        # every survivor applies identical evictions at this boundary even
+        # if their local grace periods elapse a boundary apart.
+        if self.monitor is not None:
+            self.monitor.renew(megabatch=mb)
+            observed = self.monitor.poll(mb)
+            if span is not None:
+                observed = span.agree_events(observed)
+                for ev in observed:
+                    if ev.kind in ("crash", "preempt"):
+                        self.monitor.mark_dead(ev.process, mb)
+            for ev in observed:
+                state = self._apply_event(trainer, state, mb, ev)
 
         # 1. transient stalls that ran their course
         for slot, (expire, mult) in sorted(self._stalls.items()):
@@ -239,7 +506,8 @@ class FleetController:
                 del self._stalls[slot]
                 self._log(mb, "stall_recovered", slot)
 
-        # 2. quarantined workers whose backoff elapsed
+        # 2. quarantined workers whose backoff elapsed (injector-driven
+        # evictions only: monitor evictions rejoin via the lease signal)
         for q in [q for q in self._quarantine if q.rejoin_at <= mb]:
             cap = self.max_replicas or np.inf
             if not elastic or trainer.cfg.n_replicas >= cap:
@@ -251,8 +519,9 @@ class FleetController:
                 mb, "rejoin", trainer.cfg.n_replicas - 1, level=q.level
             )
 
-        # 3. injected fault events
-        if self.injector is not None:
+        # 3. injected fault events (slot-grain; a spanning trainer changes
+        # membership at process grain through the monitor path instead)
+        if self.injector is not None and span is None:
             for ev in self.injector.events_for(mb, trainer.cfg.n_replicas):
                 state = self._apply_event(trainer, state, mb, ev)
 
@@ -260,6 +529,7 @@ class FleetController:
         if (
             self.timeout_factor > 0
             and elastic
+            and span is None
             and trainer.cfg.n_replicas > self.min_replicas
         ):
             factors = np.asarray(trainer.speed.factors, np.float64)
@@ -274,6 +544,8 @@ class FleetController:
 
     # ------------------------------------------------------------------
     def _apply_event(self, trainer, state, mb: int, ev: FaultEvent):
+        if ev.process is not None:
+            return self._apply_process_event(trainer, state, mb, ev)
         R = trainer.cfg.n_replicas
         elastic = getattr(trainer.algo, "resize_policy", "merge") != "fixed"
         slot = ev.replica if ev.replica is not None else R - 1
@@ -335,6 +607,71 @@ class FleetController:
         )
         self._log(mb, "nan", slot)
         return dataclasses.replace(state, replicas=poisoned)
+
+    def _apply_process_event(self, trainer, state, mb: int, ev: FaultEvent):
+        """A monitor-sourced event targeting a whole process: resolve its
+        replica slots (trainer's spanning context, else the monitor's
+        slot_map) and apply one multi-slot membership change. No
+        quarantine entry is queued — a monitor-evicted process rejoins
+        only when its lease resumes (the monitor's ``join`` path)."""
+        pid = ev.process
+        R = trainer.cfg.n_replicas
+        elastic = getattr(trainer.algo, "resize_policy", "merge") != "fixed"
+        spanning = getattr(trainer, "_span", None) is not None
+        slots = None
+        if hasattr(trainer, "process_slots"):
+            slots = trainer.process_slots(pid)
+        if slots is None and self.monitor is not None and self.monitor.slot_map:
+            slots = self.monitor.slot_map.get(pid)
+
+        if ev.kind == "join":
+            n = len(slots) if slots else 1
+            cap = self.max_replicas or np.inf
+            if spanning:
+                # v1: a host-span fleet cannot re-split live device state
+                # onto a returning process; it rejoins on restart instead
+                self._log(mb, "join_skipped", None, process=pid,
+                          reason="spanning rejoin needs restart")
+            elif not elastic:
+                self._log(mb, "join_skipped", None, process=pid,
+                          reason="fixed membership")
+            elif R + n > cap:
+                self._log(mb, "join_skipped", None, process=pid,
+                          reason="at max_replicas")
+            else:
+                state = trainer.resize(state, R + n)
+                self._log(mb, "join", list(range(R, R + n)), process=pid)
+            return state
+
+        if ev.kind not in ("crash", "preempt"):
+            self._log(mb, f"{ev.kind}_skipped", None, process=pid,
+                      reason="process events are crash/preempt/join")
+            return state
+        if slots is None:
+            self._log(mb, f"{ev.kind}_skipped", None, process=pid,
+                      reason="no slot mapping for process")
+            return state
+        if not elastic:
+            self._log(mb, f"{ev.kind}_skipped", list(slots), process=pid,
+                      reason="fixed membership")
+            return state
+        if R - len(slots) < self.min_replicas:
+            self._log(mb, f"{ev.kind}_skipped", list(slots), process=pid,
+                      reason="at min_replicas")
+            return state
+
+        graceful = ev.kind == "preempt"
+        slots = sorted(int(s) for s in slots)
+        state = trainer.remove_replicas(state, slots, merge_leavers=graceful)
+        dropset = set(slots)
+        self._stalls = {
+            s - sum(1 for d in slots if d < s): v
+            for s, v in self._stalls.items()
+            if s not in dropset
+        }
+        self._log(mb, "evict", slots, reason=ev.kind, graceful=graceful,
+                  process=pid)
+        return state
 
     def _evict(self, trainer, state, mb, slot, graceful, reason,
                rejoin_in=None):

@@ -166,6 +166,9 @@ class ElasticTrainer:
                                      # only; False = the sequential oracle
     mesh: Optional[Mesh] = None      # replica mesh for cfg.placement='sharded'
                                      # (None = build one over the local devices)
+    multihost: Optional[Any] = None  # launch.multihost.MultihostContext: span
+                                     # this trainer across processes
+                                     # (DESIGN.md §10). None = single process.
     seed: int = 0
 
     def __post_init__(self):
@@ -177,12 +180,34 @@ class ElasticTrainer:
             )
         self.model = as_trainable_model(self.model)
         self.algo = algorithms.get(self.cfg.algorithm)
+        # process spanning (DESIGN.md §10). Host span: every process runs
+        # the identical deterministic host loop at the *global* R but holds
+        # only its contiguous block of replica slots on a process-local
+        # mesh; cross-process reductions go through the context's file
+        # exchange. Device span: the mesh just covers the global device
+        # list — the SPMD executors are unchanged.
+        self._span = None
+        self._global_put = False
+        if self.multihost is not None:
+            if self.multihost.spanning == "host":
+                self._setup_host_span()
+            else:
+                self._global_put = True
+                if self.cfg.placement != "sharded":
+                    raise ValueError(
+                        "device-span multihost needs cfg.placement='sharded'"
+                    )
         self._mesh_pool = None
         self._exec_cache = {}            # shard count -> sharded executors
+        self._span_exec_cache = {}       # shard count -> span partial-merge
         if self.cfg.placement == "sharded":
             if self.mesh is None:
-                self._mesh_pool = ReplicaMeshPool()
-                self.mesh = self._mesh_pool.mesh_for(self.cfg.n_replicas)
+                devices = (
+                    self.multihost.global_devices()
+                    if self._global_put else None
+                )
+                self._mesh_pool = ReplicaMeshPool(devices)
+                self.mesh = self._mesh_pool.mesh_for(self._mesh_width())
             else:
                 if REPLICA_AXIS not in self.mesh.shape:
                     raise ValueError(
@@ -218,6 +243,66 @@ class ElasticTrainer:
             else None
         )
         self._build_jits()
+
+    # ------------------------------------------------------------------
+    # process spanning (DESIGN.md §10)
+    # ------------------------------------------------------------------
+    def _setup_host_span(self) -> None:
+        """Validate + adopt a host-span multihost context: this process
+        will run the global deterministic loop but execute only its own
+        contiguous replica block. The constraints are structural, not
+        incidental: vmap/legacy have no per-shard executors to localize;
+        a measured speed model would feed each process different observed
+        factors and fork the deterministic plan; algorithms whose round
+        transforms reduce *across* replicas every round would need a
+        cross-process collective inside the jitted scan, which the host
+        exchange cannot provide."""
+        ctx = self.multihost
+        if self.cfg.placement != "sharded":
+            raise ValueError("host-span multihost needs cfg.placement='sharded'")
+        if self.engine != "scan":
+            raise ValueError("host-span multihost needs engine='scan'")
+        if self.mesh is not None:
+            raise ValueError(
+                "host-span multihost builds its own process-local mesh; "
+                "do not pass one"
+            )
+        if isinstance(self.speed, MeasuredSpeedModel):
+            raise ValueError(
+                "host-span multihost needs the simulated SpeedModel: every "
+                "process must plan from identical speed factors"
+            )
+        if getattr(self.algo, "round_collectives", False):
+            raise ValueError(
+                f"algorithm {self.cfg.algorithm!r} reduces across replicas "
+                "inside every round (round_collectives=True); its collectives "
+                "cannot span processes on the host-exchange path"
+            )
+        ctx.assign_slots(self.cfg.n_replicas)
+        self._span = ctx
+
+    def _mesh_width(self) -> int:
+        """Replica count the local mesh must cover: the process-local
+        block under host span, the global R otherwise."""
+        return (
+            self._span.local_count() if self._span is not None
+            else self.cfg.n_replicas
+        )
+
+    def _span_slice(self) -> slice:
+        """This process's rows of any global (R, ...) array."""
+        if self._span is None:
+            return slice(None)
+        lo, hi = self._span.local_bounds()
+        return slice(lo, hi)
+
+    def process_slots(self, pid: int) -> Optional[list[int]]:
+        """Global replica slots owned by fleet process ``pid`` (None when
+        not spanning or unknown) — the FleetController's resolution hook
+        for process-grain fault events."""
+        if self._span is None:
+            return None
+        return self._span.slots_of(pid)
 
     # ------------------------------------------------------------------
     # jitted device functions
@@ -284,8 +369,7 @@ class ElasticTrainer:
             }
             return new_replicas, new_momentum, metrics
 
-        def megabatch_fn(replicas, momentum, batches, lr_vec, update_mask,
-                         transforms):
+        def make_megabatch_fn(raw_stats):
             """Scan-fused mega-batch: all rounds in one device program.
 
             ``batches`` leaves and ``update_mask`` carry a leading
@@ -294,47 +378,65 @@ class ElasticTrainer:
             sharded placement the raw per-round sums are psum-ed over the
             replica axis first, so every shard (and the host) sees
             whole-population metrics.
+
+            ``raw_stats`` (host span, DESIGN.md §10): the psum above only
+            covers the *local* mesh, so normalizing in-program would bake
+            in per-process denominators. The variant returns the per-round
+            raw sums instead — ``{"round_sums": (n_rounds, 4)}`` — and the
+            host completes the reduction across processes with the exact
+            same arithmetic (``_finish_metrics``). The default variant is
+            byte-identical to the pre-span engine.
             """
 
-            def body(carry, xs):
-                reps, mom = carry
-                batch, mask = xs
-                new_reps, new_mom, m = round_body(
-                    reps, mom, batch, lr_vec, mask, transforms
-                )
-                sums = jnp.stack(
-                    [
-                        jnp.sum(m["loss"] * mask),
-                        jnp.sum(m["accuracy"] * mask),
-                        jnp.sum(m["n_valid"] * mask),
-                        jnp.sum(mask),
-                    ]
-                )
-                if axis:
-                    sums = jax.lax.psum(sums, axis)
-                denom = jnp.maximum(sums[3], 1.0)
-                stats = jnp.stack(
-                    [
-                        sums[0] / denom,
-                        sums[1] / denom,
-                        sums[2],
-                        (sums[3] > 0).astype(jnp.float32),
-                    ]
-                )
-                return (new_reps, new_mom), stats
+            def megabatch_fn(replicas, momentum, batches, lr_vec,
+                             update_mask, transforms):
+                def body(carry, xs):
+                    reps, mom = carry
+                    batch, mask = xs
+                    new_reps, new_mom, m = round_body(
+                        reps, mom, batch, lr_vec, mask, transforms
+                    )
+                    sums = jnp.stack(
+                        [
+                            jnp.sum(m["loss"] * mask),
+                            jnp.sum(m["accuracy"] * mask),
+                            jnp.sum(m["n_valid"] * mask),
+                            jnp.sum(mask),
+                        ]
+                    )
+                    if axis:
+                        sums = jax.lax.psum(sums, axis)
+                    if raw_stats:
+                        return (new_reps, new_mom), sums
+                    denom = jnp.maximum(sums[3], 1.0)
+                    stats = jnp.stack(
+                        [
+                            sums[0] / denom,
+                            sums[1] / denom,
+                            sums[2],
+                            (sums[3] > 0).astype(jnp.float32),
+                        ]
+                    )
+                    return (new_reps, new_mom), stats
 
-            (replicas, momentum), stats = jax.lax.scan(
-                body, (replicas, momentum), (batches, update_mask)
-            )
-            live = stats[:, 3]
-            n_live = jnp.maximum(jnp.sum(live), 1.0)
-            metrics = {
-                "loss": jnp.sum(stats[:, 0]) / n_live,
-                "accuracy": jnp.sum(stats[:, 1]) / n_live,
-                "n_valid": jnp.sum(stats[:, 2]),
-                "rounds_live": jnp.sum(live),
-            }
-            return replicas, momentum, metrics
+                (replicas, momentum), stats = jax.lax.scan(
+                    body, (replicas, momentum), (batches, update_mask)
+                )
+                if raw_stats:
+                    return replicas, momentum, {"round_sums": stats}
+                live = stats[:, 3]
+                n_live = jnp.maximum(jnp.sum(live), 1.0)
+                metrics = {
+                    "loss": jnp.sum(stats[:, 0]) / n_live,
+                    "accuracy": jnp.sum(stats[:, 1]) / n_live,
+                    "n_valid": jnp.sum(stats[:, 2]),
+                    "rounds_live": jnp.sum(live),
+                }
+                return replicas, momentum, metrics
+
+            return megabatch_fn
+
+        megabatch_fn = make_megabatch_fn(self._span is not None)
 
         # Donate the replica/momentum buffers: the engine updates them in
         # place on device (no copy per mega-batch). CPU XLA cannot donate —
@@ -388,6 +490,24 @@ class ElasticTrainer:
 
         self._finite_rows = jax.jit(finite_rows)
 
+        if self._span is not None:
+            # host-span momentum term: the exact f32 arithmetic of
+            # normalized_merge's global-momentum step, applied to the
+            # exchange-summed merged tree (every process computes it
+            # identically from replicated inputs)
+            def span_momentum(merged, g, gp, gamma):
+                f32 = jnp.float32
+                return tu.tree_map(
+                    lambda m, a, b: (
+                        m.astype(f32) + gamma * (a.astype(f32) - b.astype(f32))
+                    ).astype(m.dtype),
+                    merged, g, gp,
+                )
+
+            self._span_momentum = jax.jit(
+                span_momentum, static_argnames=("gamma",)
+            )
+
     def _install_sharded_executors(self):
         """Bind (or re-bind, after a resize) the engine entry points to the
         current ``self.mesh``, reusing previously built executors for a
@@ -400,6 +520,25 @@ class ElasticTrainer:
             execs = self._build_sharded_executors(*self._bodies)
             self._exec_cache[key] = execs
         self._round, self._megabatch, self._merge, self._norms = execs
+        if self._span is not None:
+            partial = self._span_exec_cache.get(key)
+            if partial is None:
+                mesh, s0 = self.mesh, replica_spec(0)
+                # local share of the Alg.-2 weighted sum: psum over the
+                # *local* mesh only; the exchange completes it (host span)
+                partial = jax.jit(
+                    shard_map(
+                        lambda r, a: asgd.normalized_merge(
+                            r, a, None, None, 0.0, axis_name=REPLICA_AXIS
+                        ),
+                        mesh=mesh,
+                        in_specs=(s0, s0),
+                        out_specs=P(),
+                        check_rep=False,
+                    )
+                )
+                self._span_exec_cache[key] = partial
+            self._span_partial = partial
 
     def _build_sharded_executors(self, round_body, megabatch_fn, merge_fn,
                                  donate):
@@ -533,15 +672,86 @@ class ElasticTrainer:
     def merge_models(self, replicas, alphas, global_model, prev_global, gamma):
         """Normalized merge (Alg. 2 tensor math, jitted): returns
         (new_global, replicas reset to it). gamma=0 / None globals skip the
-        global-momentum term — a plain weighted average."""
+        global-momentum term — a plain weighted average.
+
+        Host span: ``alphas`` is the *global* (R,) weight vector while
+        ``replicas`` holds only the local rows; the weighted sum completes
+        across processes through the exchange (``_merge_spanning``)."""
+        if self._span is not None:
+            return self._merge_spanning(
+                replicas, alphas, global_model, prev_global, gamma
+            )
         return self._merge(
             replicas, jnp.asarray(alphas, jnp.float32),
             global_model, prev_global, gamma,
         )
 
+    def _merge_spanning(self, replicas, alphas, global_model, prev_global,
+                        gamma):
+        """Algorithm 2's merge across processes (DESIGN.md §10).
+
+        Each process computes its local share of the weighted sum on
+        device (same f32 arithmetic as the in-mesh psum path — the only
+        cross-process difference is float reassociation), then the file
+        exchange sums the partials. The contributed alpha mass rides along:
+        when a peer died mid-mega-batch its partial is simply absent, and
+        scaling the sum by ``expected/contributed`` mass is exactly the
+        crash semantics of ``remove_replicas`` — the dead replicas' merge
+        weight redistributes proportionally over the survivors.
+        """
+        span = self._span
+        lo, hi = span.local_bounds()
+        a = np.asarray(alphas, np.float64)
+        a_local = jnp.asarray(a[lo:hi], jnp.float32)
+        part = self._span_partial(replicas, a_local)
+        payload = {
+            "partial": tu.tree_map(np.asarray, part),
+            "mass": np.float64(a[lo:hi].sum()),
+        }
+        total, contributors = span.allreduce_sum("merge", payload)
+        merged_np = total["partial"]
+        if len(contributors) < len(span.active_processes()):
+            expected = float(a.sum())
+            contributed = float(total["mass"])
+            if contributed <= 0.0:
+                raise FloatingPointError(
+                    "every process holding nonzero merge weight died "
+                    "mid-mega-batch; nothing to merge"
+                )
+            scale = np.float32(expected / contributed)
+            merged_np = tu.tree_map(
+                lambda l: (l * scale).astype(l.dtype), merged_np
+            )
+        merged = tu.tree_map(jnp.asarray, merged_np)
+        if (
+            global_model is not None and prev_global is not None
+            and gamma != 0.0
+        ):
+            merged = self._span_momentum(
+                merged, global_model, prev_global, gamma=float(gamma)
+            )
+        new_replicas = tu.tree_broadcast_replicas(merged, hi - lo)
+        new_replicas, _, merged, _ = self._place_state(
+            new_replicas, None, merged, None
+        )
+        return merged, new_replicas
+
     def replica_norms(self, replicas):
-        """Per-replica L2 norms (feeds Alg. 2's perturbation condition)."""
-        return self._norms(replicas)
+        """Per-replica L2 norms (feeds Alg. 2's perturbation condition).
+        Host span: local norms are bit-exact per replica (no cross-replica
+        reduction), so an allgather reassembles the global (R,) vector; a
+        dead peer's rows read 0 — its merge weight is redistributed at the
+        merge anyway."""
+        if self._span is None:
+            return self._norms(replicas)
+        span = self._span
+        local = np.asarray(self._norms(replicas), np.float64)
+        gathered = span.allgather("norms", local)
+        out = np.zeros(self.cfg.n_replicas, np.float64)
+        for pid, arr in gathered.items():
+            plo, phi = span.bounds_of(pid)
+            out[plo:phi] = np.asarray(arr, np.float64)
+        return out
 
     # ------------------------------------------------------------------
     # state init
@@ -550,7 +760,9 @@ class ElasticTrainer:
         R = self.cfg.n_replicas
         rng = jax.random.PRNGKey(self.seed)
         params = self.model.init(rng)
-        replicas = tu.tree_broadcast_replicas(params, R)
+        # host span: device trees hold only this process's replica block;
+        # the host-side vectors (b, lr) always stay global
+        replicas = tu.tree_broadcast_replicas(params, self._mesh_width())
         momentum = init_momentum(replicas, self.sgd)
         extras = self.algo.init_state_extras(
             self.cfg, params, self.keep_global_copies
@@ -611,6 +823,12 @@ class ElasticTrainer:
         R = self.cfg.n_replicas
         if new_R == R:
             return state
+        if self._span is not None:
+            raise ValueError(
+                "a host-span trainer changes membership at process grain "
+                "(heartbeat-driven fleet events); generic resize() is "
+                "unsupported (DESIGN.md §10)"
+            )
         if new_R < 1:
             raise ValueError(f"cannot resize to {new_R} replicas")
         policy = getattr(self.algo, "resize_policy", "merge")
@@ -693,7 +911,10 @@ class ElasticTrainer:
         self.speed.resize(new_R)
         self.scheduler.resize(self.cfg)
         if self.cfg.placement == "sharded":
-            self.mesh = self._mesh_pool.mesh_for(new_R)
+            # host span: the local mesh covers this process's block, whose
+            # width survives process-grain eviction — same mesh, same
+            # executor caches, zero recompiles
+            self.mesh = self._mesh_pool.mesh_for(self._mesh_width())
             self._install_sharded_executors()
 
     def _place_state(self, replicas, momentum, global_model, prev_global):
@@ -703,8 +924,8 @@ class ElasticTrainer:
             return replicas, momentum, global_model, prev_global
         shard0 = NamedSharding(self.mesh, replica_spec(0))
         repl = NamedSharding(self.mesh, P())
-        put0 = lambda l: jax.device_put(l, shard0)  # noqa: E731
-        putr = lambda l: jax.device_put(l, repl)  # noqa: E731
+        put0 = lambda l: self._put_leaf(l, shard0)  # noqa: E731
+        putr = lambda l: self._put_leaf(l, repl)  # noqa: E731
         replicas = tu.tree_map(put0, replicas)
         if momentum is not None:
             momentum = tu.tree_map(put0, momentum)
@@ -713,6 +934,18 @@ class ElasticTrainer:
         if prev_global is not None:
             prev_global = tu.tree_map(putr, prev_global)
         return replicas, momentum, global_model, prev_global
+
+    def _put_leaf(self, l, sharding):
+        """Upload one leaf. Device span: the target sharding covers
+        non-addressable devices, which plain ``device_put`` rejects —
+        ``make_array_from_callback`` assembles the global array from the
+        (identical, host-replicated) value every process holds."""
+        if self._global_put:
+            arr = np.asarray(l)
+            return jax.make_array_from_callback(
+                arr.shape, sharding, lambda idx: arr[idx]
+            )
+        return jax.device_put(l, sharding)
 
     def remove_replicas(
         self, state: ElasticState, indices, merge_leavers: bool = True
@@ -743,6 +976,8 @@ class ElasticTrainer:
             raise ValueError(
                 f"cannot remove all {R} replicas (removal of {drop})"
             )
+        if self._span is not None:
+            return self._remove_replicas_spanning(state, drop, merge_leavers)
         # the permutation below moves speed factors / clocks with their
         # replica — a prefetched plan consumed them in the old order
         self.invalidate_prefetch()
@@ -781,26 +1016,110 @@ class ElasticTrainer:
 
         return self.resize(state, R - len(drop))
 
+    def _remove_replicas_spanning(self, state, drop, merge_leavers):
+        """Evict whole peer processes from a host-span fleet (DESIGN.md §10).
+
+        The drop set must cover exact process blocks (the monitor emits
+        process-grain events, so it always does); the local replica count
+        is untouched — same mesh, same executor jit caches, zero
+        recompiles. Every surviving process runs this identically:
+
+        * final merge over survivors: the dead process can't contribute a
+          partial, so the exchange's mass renormalization reproduces
+          ``merge_leavers=False`` crash semantics exactly (with graceful
+          leavers the peer is still exchanging and its updates fold in);
+        * survivors-first renumbering is order-preserving, so each
+          process's slot block stays contiguous; host-global vectors
+          (b, lr, speed factors, virtual clocks) permute and shrink the
+          same way the single-process path does.
+        """
+        span = self._span
+        R = self.cfg.n_replicas
+        victims = span.processes_for_slots(drop)
+        self.invalidate_prefetch()
+
+        alphas = np.asarray(state.b, np.float64).copy()
+        if not merge_leavers:
+            alphas[drop] = 0.0
+        if alphas.sum() <= 0:
+            alphas = np.ones(R, np.float64)
+            if not merge_leavers:
+                alphas[drop] = 0.0
+        alphas = alphas / alphas.sum()
+        merged, merged_replicas = self.merge_models(
+            state.replicas, alphas, None, None, 0.0
+        )
+
+        dropset = set(drop)
+        survivors = [i for i in range(R) if i not in dropset]
+        perm = survivors + list(drop)
+        if perm != list(range(R)):
+            self.speed.permute(perm)
+            self.scheduler.clock.permute(perm)
+        new_R = R - len(drop)
+        b_perm = np.asarray(state.b, np.float64)[perm]
+        lr_perm = np.asarray(state.lr, np.float64)[perm]
+        for pid in victims:
+            span.remove_process(pid)
+        self._adopt_width(new_R)
+        new_cfg = self.cfg
+        new_b, new_lr = self.algo.resize_b(
+            new_cfg, b_perm[:new_R], lr_perm[:new_R], self.base_lr
+        )
+
+        policy = getattr(self.algo, "resize_policy", "merge")
+        if policy == "merge":
+            new_replicas = merged_replicas
+            new_momentum = state.momentum  # survivors keep their momentum
+        else:
+            # 'preserve': survivors keep their own rows — which are exactly
+            # the local rows this process already holds
+            new_replicas = state.replicas
+            new_momentum = state.momentum
+        new_global = merged if state.global_model is not None else None
+        new_prev = merged if state.prev_global is not None else None
+        new_replicas, new_momentum, new_global, new_prev = self._place_state(
+            new_replicas, new_momentum, new_global, new_prev
+        )
+        return ElasticState(
+            replicas=new_replicas,
+            global_model=new_global,
+            prev_global=new_prev,
+            momentum=new_momentum,
+            b=np.asarray(new_b, np.float64),
+            lr=np.asarray(new_lr, np.float64),
+            megabatch_idx=state.megabatch_idx,
+        )
+
     # ------------------------------------------------------------------
     # round execution engines
     # ------------------------------------------------------------------
     def _run_rounds_scan(self, state, plan, b_slots, transforms):
-        """Device-resident engine: pre-stack the plan, scan all rounds."""
+        """Device-resident engine: pre-stack the plan, scan all rounds.
+        Host span: the plan grid is built at the global R (every process
+        plans identically), but only this process's replica columns are
+        uploaded and executed."""
         R = self.cfg.n_replicas
         min_rounds = _next_pow2(plan.n_rounds) if self.round_bucket else plan.n_rounds
         grid = plan.payload_grid(R, min_rounds=max(min_rounds, 1))
         batches_np, mask = self.provider.stack_plan(grid, b_slots)
+        lr = np.asarray(state.lr, np.float32)
+        if self._span is not None:
+            sl = self._span_slice()
+            batches_np = {k: v[:, sl] for k, v in batches_np.items()}
+            mask = mask[:, sl]
+            lr = lr[sl]
         batches = {k: jnp.asarray(v) for k, v in batches_np.items()}
         replicas, momentum, m = self._megabatch(
             state.replicas,
             state.momentum,
             batches,
-            jnp.asarray(state.lr, jnp.float32),
+            jnp.asarray(lr),
             jnp.asarray(mask),
             transforms=transforms,
         )
         # single host sync per mega-batch
-        loss, acc = float(m["loss"]), float(m["accuracy"])
+        loss, acc = self._finish_metrics(m)
         return replicas, momentum, loss, acc
 
     def _run_rounds_legacy(self, state, plan, b_slots, transforms):
@@ -909,7 +1228,7 @@ class ElasticTrainer:
         # with the guard on or off.
         guard_repaired: list[int] = []
         if self.guard_nonfinite:
-            finite = np.asarray(self._finite_rows(replicas))
+            finite = self._global_finite_rows(replicas)
             if not finite.all():
                 replicas, momentum = self._repair_nonfinite(
                     state, replicas, momentum, finite
@@ -1007,7 +1326,7 @@ class ElasticTrainer:
             )
 
         # ---- collect: the single host sync of the mega-batch ----
-        train_loss, train_acc = float(m["loss"]), float(m["accuracy"])
+        train_loss, train_acc = self._finish_metrics(m)
         # the staged slot's consumer is done on device -> reusable two
         # stagings from now (the other slot is next in line)
         if staged.slot_id is not None:
@@ -1018,7 +1337,7 @@ class ElasticTrainer:
         # ---- non-finite guard (DESIGN.md §7) ----
         guard_repaired: list[int] = []
         if self.guard_nonfinite:
-            finite = np.asarray(self._finite_rows(replicas))
+            finite = self._global_finite_rows(replicas)
             if not finite.all():
                 replicas, momentum = self._repair_nonfinite(
                     state, replicas, momentum, finite
@@ -1055,6 +1374,32 @@ class ElasticTrainer:
         if guard_repaired:
             info["guard_repaired"] = guard_repaired
         return new_state, info
+
+    def _finish_metrics(self, m) -> tuple[float, float]:
+        """Collect a mega-batch's (loss, accuracy) from the device metrics.
+
+        Default engines return the fully-reduced scalars. The host-span
+        executor returns raw per-round sums over the *local* replicas
+        (``round_sums``); the exchange completes the population sum and the
+        host mirrors the in-jit normalization arithmetic in float32 — the
+        only cross-process difference from the in-mesh psum path is float
+        reassociation. A dead peer contributes nothing: that mega-batch's
+        metrics cover the survivors."""
+        if "round_sums" not in m:
+            return float(m["loss"]), float(m["accuracy"])
+        sums = np.asarray(m["round_sums"], np.float32)
+        if self._span is not None:
+            total, _ = self._span.allreduce_sum("metrics", {"sums": sums})
+            sums = np.asarray(total["sums"], np.float32)
+        denom = np.maximum(sums[:, 3], np.float32(1.0))
+        loss_r = sums[:, 0] / denom
+        acc_r = sums[:, 1] / denom
+        live = (sums[:, 3] > 0).astype(np.float32)
+        n_live = np.maximum(live.sum(dtype=np.float32), np.float32(1.0))
+        return (
+            float(loss_r.sum(dtype=np.float32) / n_live),
+            float(acc_r.sum(dtype=np.float32) / n_live),
+        )
 
     def _observe_window(self, plan, R: int, seconds: float) -> None:
         """Feed one mega-batch's measurement window to the speed model:
@@ -1142,13 +1487,26 @@ class ElasticTrainer:
             batches_np, mask = provider.stack_plan(grid, b_slots)
 
         lr32 = np.asarray(lr, np.float32)
+        if self._span is not None:
+            # host span: upload only this process's replica columns (the
+            # staging slot still packs the full global grid — its shapes
+            # key the double buffer; the slices below are views)
+            sl = self._span_slice()
+            batches_np = {k: v[:, sl] for k, v in batches_np.items()}
+            mask = mask[:, sl]
+            lr32 = lr32[sl]
         if cfg.placement == "sharded":
             s1 = NamedSharding(self.mesh, replica_spec(1))
             s0 = NamedSharding(self.mesh, replica_spec(0))
-            batches, mask_dev, lr_dev = jax.device_put(
-                (batches_np, mask, lr32),
-                ({k: s1 for k in batches_np}, s1, s0),
-            )
+            if self._global_put:
+                batches = {k: self._put_leaf(v, s1) for k, v in batches_np.items()}
+                mask_dev = self._put_leaf(mask, s1)
+                lr_dev = self._put_leaf(lr32, s0)
+            else:
+                batches, mask_dev, lr_dev = jax.device_put(
+                    (batches_np, mask, lr32),
+                    ({k: s1 for k in batches_np}, s1, s0),
+                )
         else:
             batches, mask_dev, lr_dev = jax.device_put((batches_np, mask, lr32))
         return _StagedMegaBatch(
@@ -1200,6 +1558,23 @@ class ElasticTrainer:
         if s.slot_id is not None:
             self._staging.release(s.slot_id)
 
+    def _global_finite_rows(self, replicas) -> np.ndarray:
+        """(R,) bool over the *global* population. Host span: the local
+        detection masks allgather so every process agrees on which rows
+        need repair (and therefore issues the same repair exchanges); a
+        dead peer's rows read finite — its weight is handled by eviction,
+        not the guard."""
+        finite_local = np.asarray(self._finite_rows(replicas), bool)
+        if self._span is None:
+            return finite_local
+        span = self._span
+        gathered = span.allgather("finite", finite_local)
+        out = np.ones(self.cfg.n_replicas, bool)
+        for pid, arr in gathered.items():
+            plo, phi = span.bounds_of(pid)
+            out[plo:phi] = np.asarray(arr, bool)
+        return out
+
     def _repair_nonfinite(self, state, replicas, momentum, finite):
         """Re-clone non-finite replicas from a finite donor (DESIGN.md §7).
 
@@ -1217,8 +1592,13 @@ class ElasticTrainer:
         algorithm that keeps no global copy cannot recover and raises.
         Healed replicas continue with zeroed momentum and their b/lr
         untouched (Algorithm 1 adapts them onward as usual).
+
+        Host span: ``finite`` is the exchange-agreed *global* mask; the
+        row operations below apply its local slice, and the donor merge
+        (span-aware ``merge_models``) runs on every process — identical
+        global mask → identical exchange sequence.
         """
-        mask = jnp.asarray(finite)
+        mask = jnp.asarray(finite[self._span_slice()])
 
         def keep_rows(l, fill):
             m = mask.reshape((-1,) + (1,) * (l.ndim - 1))
@@ -1324,6 +1704,58 @@ class ElasticTrainer:
     def evaluate(self, params: PyTree, test_batches: list) -> dict:
         return self.evaluate_async(params, test_batches)()
 
+    def _span_gather_state(self, state: ElasticState):
+        """Assemble width-complete ``(replicas, momentum)`` host trees under
+        a host span: allgather every live process's local rows and lay them
+        into global-``R`` numpy arrays by slot block. Rows belonging to
+        already-evicted processes no longer exist (the width shrank with
+        them), so the only fill needed is for peers that die *during* this
+        exchange — their rows take the global model broadcast (replicas) /
+        zeros (momentum), matching what a crash eviction would have merged
+        away anyway.
+        """
+        span = self._span
+        R = int(self.cfg.n_replicas)
+        reps_local = tu.tree_map(np.asarray, state.replicas)
+        mom_local = (
+            tu.tree_map(np.asarray, state.momentum)
+            if state.momentum is not None else None
+        )
+        gathered = span.allgather(
+            "ckpt", {"replicas": reps_local, "momentum": mom_local}
+        )
+        have = sorted(gathered)
+        g_np = (
+            tu.tree_map(np.asarray, state.global_model)
+            if state.global_model is not None else None
+        )
+
+        def assemble(key: str, fill_tree):
+            local_tree = gathered[span.process_id][key]
+            if local_tree is None:
+                return None
+            local_leaves, treedef = jax.tree_util.tree_flatten(local_tree)
+            by_pid = {
+                pid: jax.tree_util.tree_flatten(gathered[pid][key])[0]
+                for pid in have
+            }
+            fill_leaves = (
+                jax.tree_util.tree_leaves(fill_tree)
+                if fill_tree is not None else None
+            )
+            out = []
+            for i, leaf in enumerate(local_leaves):
+                g = np.zeros((R,) + leaf.shape[1:], leaf.dtype)
+                if fill_leaves is not None:
+                    g[:] = fill_leaves[i][None]
+                for pid in have:
+                    lo, hi = span.bounds_of(pid)
+                    g[lo:hi] = by_pid[pid][i]
+                out.append(g)
+            return jax.tree_util.tree_unflatten(treedef, out)
+
+        return assemble("replicas", g_np), assemble("momentum", None)
+
     # ------------------------------------------------------------------
     # crash-consistent checkpointing (DESIGN.md §7)
     # ------------------------------------------------------------------
@@ -1358,9 +1790,17 @@ class ElasticTrainer:
             clock_t = np.asarray(snap["clock_t"], np.float64)
             if snap["speed"] is not None:
                 speed_sd = snap["speed"]
+        replicas_ckpt, momentum_ckpt = state.replicas, state.momentum
+        if self._span is not None:
+            # width-complete checkpoint (DESIGN.md §10): allgather every
+            # process's rows so a single-process run can restore it. Every
+            # process assembles the payload (the allgather is an exchange —
+            # all must participate on the deterministic interval), but only
+            # the publishing manager writes (CheckpointManager(publisher=)).
+            replicas_ckpt, momentum_ckpt = self._span_gather_state(state)
         tree = {
-            "replicas": state.replicas,
-            "momentum": state.momentum,
+            "replicas": replicas_ckpt,
+            "momentum": momentum_ckpt,
             "global_model": state.global_model,
             "prev_global": state.prev_global,
             "b": np.asarray(state.b, np.float64),
@@ -1410,6 +1850,10 @@ class ElasticTrainer:
             )
         new_R = int(meta["n_replicas"])
         if new_R != self.cfg.n_replicas:
+            if self._span is not None:
+                # re-split the checkpointed global width across the live
+                # processes before adopting it (raises if indivisible)
+                self._span.assign_slots(new_R)
             self._adopt_width(new_R)
         speed_sd = self.speed.state_dict()
         ckpt_kind = meta.get("speed_meta", {}).get("kind")
@@ -1430,9 +1874,19 @@ class ElasticTrainer:
         # algorithms without Alg.-2 global copies still publish a global
         # model from their first barrier onward (MergeOutcome.global_model)
         params_like = tu.tree_replica_slice(ref.replicas, 0)
+        like_replicas, like_momentum = ref.replicas, ref.momentum
+        if self._span is not None:
+            # checkpoints are width-complete (global R); the local ref trees
+            # only span this process's block, so rebuild global-width likes
+            like_replicas = tu.tree_broadcast_replicas(params_like, new_R)
+            if ref.momentum is not None:
+                like_momentum = tu.tree_map(
+                    lambda l: jnp.zeros((new_R,) + l.shape[1:], l.dtype),
+                    ref.momentum,
+                )
         like = {
-            "replicas": ref.replicas,
-            "momentum": ref.momentum,
+            "replicas": like_replicas,
+            "momentum": like_momentum,
             "global_model": params_like if has.get("global_model") else None,
             "prev_global": params_like if has.get("prev_global") else None,
             "b": np.zeros(new_R, np.float64),
@@ -1450,8 +1904,17 @@ class ElasticTrainer:
             self.speed.discard_next_window()
         if "provider" in meta and hasattr(self.provider, "load_state_dict"):
             self.provider.load_state_dict(meta["provider"])
+        replicas_t, momentum_t = tree["replicas"], tree["momentum"]
+        if self._span is not None:
+            # keep only this process's slot block of the global-width rows
+            sl = self._span_slice()
+            replicas_t = tu.tree_map(lambda l: np.asarray(l)[sl], replicas_t)
+            if momentum_t is not None:
+                momentum_t = tu.tree_map(
+                    lambda l: np.asarray(l)[sl], momentum_t
+                )
         replicas, momentum, global_model, prev_global = self._place_state(
-            tree["replicas"], tree["momentum"],
+            replicas_t, momentum_t,
             tree["global_model"], tree["prev_global"],
         )
         return ElasticState(

@@ -33,7 +33,7 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, multi_pod: bool = False):
     return jax.make_mesh((n_data, n_model), ("data", "model"))
 
 
-def make_replica_mesh(n_replicas: int, devices=None):
+def make_replica_mesh(n_replicas: int, devices=None, multihost=None):
     """1-D ``(replica,)`` mesh for ``--placement sharded`` (DESIGN.md §5).
 
     On a real machine this spans the local accelerators; under
@@ -42,7 +42,17 @@ def make_replica_mesh(n_replicas: int, devices=None):
     bare single-CPU container it degenerates to a size-1 mesh. Delegates to
     sharding.rules.replica_mesh, which picks the largest device count
     dividing ``n_replicas``.
+
+    ``multihost`` accepts a bootstrapped
+    :class:`repro.launch.multihost.MultihostContext`: under a *device*
+    span the mesh is built from the jax.distributed global device list
+    (DESIGN.md §10) so the SPMD executors span processes; under a *host*
+    span each process meshes only its own devices and the context's file
+    exchange bridges them, so local devices are used unchanged.
     """
     from repro.sharding.rules import replica_mesh
 
+    if multihost is not None and devices is None:
+        if multihost.spanning == "device":
+            devices = multihost.global_devices()
     return replica_mesh(n_replicas, devices=devices)

@@ -1,0 +1,453 @@
+"""Multi-host process spanning: bootstrap, rendezvous, and the host-side
+exchange that lets one elastic trainer span N processes (DESIGN.md §10).
+
+Two spanning modes, selected by :func:`bootstrap`:
+
+* ``'device'`` — real multi-process XLA backends (TPU/GPU pods).
+  ``jax.distributed.initialize`` attaches every process to the jax
+  coordination service, ``jax.devices()`` becomes the *global* device
+  list, and the sharded replica executors run unchanged as SPMD programs
+  over a process-spanning replica mesh
+  (``sharding/rules.py::global_replica_devices``). The jax runtime
+  fate-shares — any process failure terminates the whole job — so
+  recovery is whole-fleet restart from the newest checkpoint
+  (DESIGN.md §7), not in-place eviction.
+
+* ``'host'`` — CPU fleets and the elastic path (the mode CI exercises).
+  The CPU backend cannot execute cross-process XLA computations, and the
+  coordination service's fate-sharing would kill exactly the survivors
+  the elastic model exists to keep alive, so host-span processes never
+  attach to ``jax.distributed``. Instead every process runs the identical
+  deterministic host loop at the *global* replica count R (same seeds →
+  same plans, batch-size/lr adaptation, speed model and fleet decisions),
+  executes only its own contiguous block of replica slots on a
+  process-local mesh, and completes the cross-process reductions — merge
+  partials, metric sums, replica norms, finite masks — through the
+  lease-aware file exchange below. Liveness comes from
+  ``core/fleet.py::HeartbeatMonitor`` lease files: a peer whose lease
+  goes stale is dropped mid-exchange (its merge weight renormalized over
+  the contributors), *condemned* via a tombstone so every survivor
+  converges on the same membership, and formally evicted through the
+  fleet's crash path at the next mega-batch boundary.
+
+Exchange correctness under fail-stop (why no consensus round is needed
+per exchange): files land via atomic rename, so a partial write is never
+visible; a peer's contribution to sequence n either was published before
+it died (every survivor sees it — survivors only stop waiting after the
+peer's lease has been stale for a full grace period, by which time any
+pre-death rename is long visible) or was not (no survivor sees it, all
+drop the peer). Membership *agreement* across survivors is handled one
+level up: tombstones make the earliest staleness observation
+authoritative, and ``agree_events`` allgathers the per-process fleet
+proposals at each mega-batch boundary so all survivors evict the same
+processes at the same boundary.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.fleet import FaultEvent
+from repro.utils.logging import log
+
+ENV_NUM_PROCESSES = "REPRO_MH_NUM_PROCESSES"
+ENV_PROCESS_ID = "REPRO_MH_PROCESS_ID"
+ENV_FLEET_DIR = "REPRO_MH_FLEET_DIR"
+ENV_COORDINATOR = "REPRO_MH_COORDINATOR"
+ENV_SPANNING = "REPRO_MH_SPANNING"
+
+# kinds a process may propose about a *peer* at a boundary, in the wire
+# encoding used by agree_events (join completes a monitor-side rejoin)
+_EVENT_CODES = {"crash": 0, "preempt": 1, "join": 2}
+_EVENT_KINDS = {v: k for k, v in _EVENT_CODES.items()}
+
+
+class ProcessCondemned(RuntimeError):
+    """This process was declared dead by a fleet peer (stale lease) and
+    must not contribute further updates — restart to rejoin."""
+
+
+@dataclass(frozen=True)
+class MultihostSpec:
+    """Bootstrap parameters, usually parsed from the environment
+    (``REPRO_MH_*``) that ``scripts/multihost_launch.py`` exports."""
+
+    num_processes: int
+    process_id: int
+    fleet_dir: str
+    coordinator: Optional[str] = None
+    spanning: str = "auto"          # auto | host | device
+
+    def __post_init__(self):
+        if self.num_processes < 1:
+            raise ValueError("num_processes must be >= 1")
+        if not 0 <= self.process_id < self.num_processes:
+            raise ValueError(
+                f"process_id {self.process_id} out of range for "
+                f"{self.num_processes} processes"
+            )
+        if self.spanning not in ("auto", "host", "device"):
+            raise ValueError(f"unknown spanning mode {self.spanning!r}")
+
+
+def spec_from_env(environ=None) -> Optional[MultihostSpec]:
+    """Build a spec from ``REPRO_MH_*`` env vars; None when not launched
+    under the multi-host runner."""
+    env = os.environ if environ is None else environ
+    if ENV_NUM_PROCESSES not in env:
+        return None
+    return MultihostSpec(
+        num_processes=int(env[ENV_NUM_PROCESSES]),
+        process_id=int(env.get(ENV_PROCESS_ID, "0")),
+        fleet_dir=env[ENV_FLEET_DIR],
+        coordinator=env.get(ENV_COORDINATOR) or None,
+        spanning=env.get(ENV_SPANNING, "auto"),
+    )
+
+
+def _resolve_spanning(spec: MultihostSpec) -> str:
+    if spec.spanning != "auto":
+        return spec.spanning
+    # CPU cannot run cross-process XLA computations; real backends can
+    return "device" if jax.default_backend() in ("tpu", "gpu") else "host"
+
+
+def bootstrap(spec: MultihostSpec) -> "MultihostContext":
+    """Initialize this process's membership in the fleet.
+
+    Device span: attach to the jax coordination service (global device
+    visibility). Host span: just prepare the shared ``fleet_dir`` layout —
+    the rendezvous barrier runs later via :meth:`MultihostContext.rendezvous`
+    once the heartbeat lease is being renewed.
+    """
+    spanning = _resolve_spanning(spec)
+    if spanning == "device":
+        if spec.num_processes > 1:
+            coordinator = spec.coordinator or "localhost:12321"
+            jax.distributed.initialize(
+                coordinator_address=coordinator,
+                num_processes=spec.num_processes,
+                process_id=spec.process_id,
+            )
+    else:
+        for sub in ("leases", "condemned", "xchg"):
+            os.makedirs(os.path.join(spec.fleet_dir, sub), exist_ok=True)
+    return MultihostContext(spec=spec, spanning=spanning)
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _save_tree(path: str, leaves: list) -> None:
+    import io
+
+    buf = io.BytesIO()
+    np.savez(buf, **{f"l{i}": np.asarray(x) for i, x in enumerate(leaves)})
+    _atomic_write(path, buf.getvalue())
+
+
+def _load_tree(path: str, n_leaves: int) -> list:
+    with np.load(path) as z:
+        return [z[f"l{i}"] for i in range(n_leaves)]
+
+
+class MultihostContext:
+    """One process's view of the fleet: slot bookkeeping shared by the
+    trainer and fleet controller, plus (host span) the file exchange.
+
+    Slot model (host span): the global replica axis 0..R-1 is split into
+    equal contiguous blocks, one per *active* process in process-id order.
+    Eviction removes whole blocks and renumbers survivors-first, which
+    preserves contiguity — so a process's local device trees are always
+    ``state[...][lo:hi]`` of the conceptual global state.
+    """
+
+    def __init__(self, spec: MultihostSpec, spanning: str):
+        self.spec = spec
+        self.spanning = spanning
+        self.process_id = spec.process_id
+        self.n_processes = spec.num_processes
+        self.fleet_dir = spec.fleet_dir
+        self._active: list[int] = list(range(spec.num_processes))
+        self._counts: dict[int, int] = {}
+        self._seq = 0
+        self._own_files: list[str] = []
+        self._liveness: Optional[Any] = None
+        self.poll_interval = 0.05
+        self.exchange_timeout = 300.0
+
+    # -- membership bookkeeping ---------------------------------------
+    def attach_liveness(self, monitor) -> None:
+        """Attach the HeartbeatMonitor whose leases decide whether an
+        exchange keeps waiting for a silent peer."""
+        self._liveness = monitor
+
+    def active_processes(self) -> list[int]:
+        return list(self._active)
+
+    def assign_slots(self, n_replicas: int) -> None:
+        n = len(self._active)
+        if n_replicas % n != 0:
+            raise ValueError(
+                f"global replica count {n_replicas} must divide evenly over "
+                f"{n} processes (contiguous equal blocks)"
+            )
+        self._counts = {pid: n_replicas // n for pid in self._active}
+
+    def bounds_of(self, pid: int) -> tuple[int, int]:
+        if pid not in self._counts:
+            raise KeyError(f"process {pid} is not an active fleet member")
+        lo = sum(self._counts[p] for p in self._active if p < pid)
+        return lo, lo + self._counts[pid]
+
+    def local_bounds(self) -> tuple[int, int]:
+        return self.bounds_of(self.process_id)
+
+    def local_count(self) -> int:
+        return self._counts[self.process_id]
+
+    def slots_of(self, pid: int) -> Optional[list[int]]:
+        if pid not in self._counts:
+            return None
+        lo, hi = self.bounds_of(pid)
+        return list(range(lo, hi))
+
+    def processes_for_slots(self, slots) -> list[int]:
+        """Resolve a drop set to whole peer processes; partial blocks or
+        the local process's own block are errors — host-span membership
+        changes at process grain only."""
+        drop = set(int(s) for s in slots)
+        victims = []
+        for pid in self._active:
+            block = set(self.slots_of(pid) or ())
+            if not block & drop:
+                continue
+            if not block <= drop:
+                raise ValueError(
+                    f"slots {sorted(drop)} split process {pid}'s block "
+                    f"{sorted(block)}; spanning eviction is per-process"
+                )
+            victims.append(pid)
+        covered = set()
+        for pid in victims:
+            covered |= set(self.slots_of(pid))
+        if covered != drop:
+            raise ValueError(f"slots {sorted(drop - covered)} map to no process")
+        if self.process_id in victims:
+            raise ProcessCondemned(
+                f"process {self.process_id} asked to evict itself"
+            )
+        return victims
+
+    def remove_process(self, pid: int) -> None:
+        if pid == self.process_id:
+            raise ProcessCondemned(
+                f"process {self.process_id} asked to evict itself"
+            )
+        self.condemn(pid)  # a removed peer must never silently rejoin
+        self._active.remove(pid)
+        del self._counts[pid]
+
+    # -- tombstones ----------------------------------------------------
+    def _tomb_path(self, pid: int) -> str:
+        return os.path.join(self.fleet_dir, "condemned", f"p{pid}")
+
+    def condemn(self, pid: int) -> None:
+        path = self._tomb_path(pid)
+        if not os.path.exists(path):
+            _atomic_write(path, b"condemned\n")
+        if self._liveness is not None:
+            self._liveness.note_condemned(pid)
+
+    def condemned(self) -> set[int]:
+        d = os.path.join(self.fleet_dir, "condemned")
+        try:
+            names = os.listdir(d)
+        except FileNotFoundError:
+            return set()
+        return {int(n[1:]) for n in names if n.startswith("p")}
+
+    def check_condemned(self) -> None:
+        if os.path.exists(self._tomb_path(self.process_id)):
+            raise ProcessCondemned(
+                f"process {self.process_id} was condemned by a fleet peer "
+                "(heartbeat lease went stale); restart to rejoin"
+            )
+
+    # -- liveness ------------------------------------------------------
+    def _peer_alive(self, pid: int) -> bool:
+        if pid in self.condemned():
+            return False
+        if self._liveness is None:
+            return True  # no monitor: rely on the exchange hard timeout
+        return self._liveness.peer_fresh(pid)
+
+    # -- the exchange --------------------------------------------------
+    def _exchange(self, tag: str, leaves: list) -> dict[int, list]:
+        """Publish this process's leaves for the next sequence number and
+        collect every live peer's; returns {pid: leaves} including self.
+
+        All processes execute the identical deterministic host loop, so
+        they issue the same exchanges in the same order — the monotonic
+        sequence counter stays in lockstep without any coordination.
+        """
+        self.check_condemned()
+        seq = self._seq
+        self._seq += 1
+        d = os.path.join(self.fleet_dir, "xchg", f"s{seq:08d}-{tag}")
+        os.makedirs(d, exist_ok=True)
+        own = os.path.join(d, f"p{self.process_id}.npz")
+        _save_tree(own, leaves)
+        self._own_files.append(own)
+
+        n_leaves = len(leaves)
+        got: dict[int, list] = {self.process_id: leaves}
+        expected = set(self._active) - {self.process_id} - self.condemned()
+        deadline = time.monotonic() + self.exchange_timeout
+        while expected - set(got):
+            for pid in sorted(expected - set(got)):
+                path = os.path.join(d, f"p{pid}.npz")
+                if os.path.exists(path):
+                    got[pid] = _load_tree(path, n_leaves)
+            missing = expected - set(got)
+            if not missing:
+                break
+            dropped = False
+            for pid in sorted(missing):
+                if not self._peer_alive(pid):
+                    # fail-stop: the peer's lease is stale — had it
+                    # published before dying, the rename would be visible
+                    # by now (grace >> fs latency). Condemn so every
+                    # survivor converges on the same contributor set.
+                    self.condemn(pid)
+                    expected.discard(pid)
+                    log(
+                        f"[multihost] exchange s{seq} {tag}: dropped "
+                        f"process {pid} (stale lease)"
+                    )
+                    dropped = True
+            if dropped:
+                continue
+            if time.monotonic() > deadline:
+                raise RuntimeError(
+                    f"exchange s{seq}-{tag} timed out waiting for "
+                    f"processes {sorted(missing)}"
+                )
+            self.check_condemned()
+            time.sleep(self.poll_interval)
+
+        # retire own files old enough that every live peer has moved past
+        # them (each process deletes only what it wrote — no delete races)
+        while len(self._own_files) > 8:
+            old = self._own_files.pop(0)
+            try:
+                os.remove(old)
+            except OSError:
+                pass
+        return got
+
+    def allreduce_sum(self, tag: str, tree) -> tuple[Any, list[int]]:
+        """Element-wise sum of ``tree`` over live processes. Returns the
+        summed tree and the sorted contributor process ids."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if self._active == [self.process_id]:
+            return jax.tree_util.tree_unflatten(treedef, leaves), [self.process_id]
+        got = self._exchange(tag, [np.asarray(x) for x in leaves])
+        contributors = sorted(got)
+        total = [np.asarray(x).copy() for x in got[contributors[0]]]
+        for pid in contributors[1:]:
+            for i, leaf in enumerate(got[pid]):
+                total[i] += leaf
+        return jax.tree_util.tree_unflatten(treedef, total), contributors
+
+    def allgather(self, tag: str, tree) -> dict[int, Any]:
+        """Gather ``tree`` from every live process: {pid: tree}."""
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        if self._active == [self.process_id]:
+            return {
+                self.process_id: jax.tree_util.tree_unflatten(treedef, leaves)
+            }
+        got = self._exchange(tag, [np.asarray(x) for x in leaves])
+        return {
+            pid: jax.tree_util.tree_unflatten(treedef, vals)
+            for pid, vals in got.items()
+        }
+
+    # -- fleet integration --------------------------------------------
+    def agree_events(self, events) -> list[FaultEvent]:
+        """Agree on this boundary's process-grain fleet events.
+
+        Each process allgathers its locally-observed proposals; the union
+        (deduplicated, deterministically ordered) is applied everywhere,
+        so survivors whose grace periods elapse a boundary apart still
+        evict identically. Runs unconditionally every boundary — it *is*
+        the exchange that keeps lockstep across membership decisions.
+        """
+        rows = [
+            (_EVENT_CODES[ev.kind], int(ev.process), int(ev.duration))
+            for ev in events
+            if ev.process is not None and ev.kind in _EVENT_CODES
+        ]
+        enc = np.asarray(rows, np.int64).reshape(len(rows), 3)
+        gathered = self.allgather("fleet", enc)
+        merged: dict[tuple[int, int], int] = {}
+        for pid in sorted(gathered):
+            for kind_c, proc, dur in np.asarray(
+                gathered[pid], np.int64
+            ).reshape(-1, 3):
+                merged.setdefault((int(proc), int(kind_c)), int(dur))
+        out = []
+        for (proc, kind_c), dur in sorted(merged.items()):
+            kind = _EVENT_KINDS[kind_c]
+            if proc == self.process_id and kind in ("crash", "preempt"):
+                # a peer has proposed evicting *us* (e.g. we flapped past
+                # its grace). Silently skipping would desync the exchange
+                # sequence — the fleet is about to continue without this
+                # process, so stop participating now.
+                raise ProcessCondemned(
+                    f"process {self.process_id} evicted by fleet agreement "
+                    f"({kind})"
+                )
+            if proc in self._active and proc != self.process_id:
+                out.append(FaultEvent(kind, process=proc, duration=dur))
+        return out
+
+    def rendezvous(self, timeout: float = 180.0) -> None:
+        """Startup barrier (host span): wait until every configured
+        process has published a heartbeat lease. Call after the local
+        lease is being renewed."""
+        if self.spanning != "host" or self.n_processes == 1:
+            return
+        from repro.core.fleet import read_leases
+
+        leases_dir = os.path.join(self.fleet_dir, "leases")
+        deadline = time.monotonic() + timeout
+        want = set(range(self.n_processes))
+        while True:
+            if want <= set(read_leases(leases_dir)):
+                return
+            if time.monotonic() > deadline:
+                missing = sorted(want - set(read_leases(leases_dir)))
+                raise RuntimeError(
+                    f"multihost rendezvous timed out; processes {missing} "
+                    f"never published a lease under {leases_dir}"
+                )
+            time.sleep(self.poll_interval)
+
+    # -- device span helpers ------------------------------------------
+    def global_devices(self) -> list:
+        """Deterministically-ordered global device list (device span)."""
+        from repro.sharding.rules import global_replica_devices
+
+        return global_replica_devices()

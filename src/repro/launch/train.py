@@ -141,6 +141,17 @@ def main(argv=None):
                          " shard_map over a 1-D replica device mesh (spans"
                          " the local accelerators; on CPU CI, the virtual"
                          " devices from --xla_force_host_platform_device_count)")
+    ap.add_argument("--multihost", default="auto", choices=["auto", "off"],
+                    help="multi-process fleet bootstrap (DESIGN.md §10):"
+                         " 'auto' spans processes when the REPRO_MH_*"
+                         " environment (set by scripts/multihost_launch.py)"
+                         " is present; 'off' ignores it")
+    ap.add_argument("--heartbeat-interval", type=float, default=0.5,
+                    help="multi-host lease renewal period (seconds)")
+    ap.add_argument("--heartbeat-grace", type=float, default=3.0,
+                    help="multi-host liveness deadline: a process whose"
+                         " lease has not changed for this long is declared"
+                         " crashed and evicted")
     ap.add_argument("--speed", default="simulated",
                     choices=["simulated", "measured"],
                     help="heterogeneity source for the scheduler's virtual"
@@ -206,6 +217,45 @@ def main(argv=None):
     ap.add_argument("--out", default="")
     args = ap.parse_args(argv)
 
+    mh = None
+    monitor = None
+    if args.multihost != "off":
+        from repro.launch import multihost as mhmod
+
+        spec = mhmod.spec_from_env()
+        if spec is not None:
+            if args.elastic_schedule:
+                ap.error("--elastic-schedule is incompatible with a"
+                         " multi-host fleet: membership is process-grained"
+                         " and signal-driven (DESIGN.md §10)")
+            if args.faults:
+                ap.error("--faults is incompatible with a multi-host fleet:"
+                         " the HeartbeatMonitor is the liveness source; the"
+                         " injector stays a single-process test harness")
+            if args.speed == "measured":
+                ap.error("--speed measured is incompatible with a multi-host"
+                         " fleet: per-replica timing only observes the local"
+                         " slot block")
+            if args.placement != "sharded":
+                log("multihost forces --placement sharded")
+                args.placement = "sharded"
+            mh = mhmod.bootstrap(spec)
+            log("multihost bootstrap",
+                process=spec.process_id, n_processes=spec.num_processes,
+                spanning=mh.spanning, fleet_dir=spec.fleet_dir or "-")
+            if mh.spanning == "host":
+                from repro.core.fleet import HeartbeatMonitor
+
+                monitor = HeartbeatMonitor(
+                    spec.fleet_dir, process_id=spec.process_id,
+                    interval=args.heartbeat_interval,
+                    grace=args.heartbeat_grace,
+                )
+                monitor.renew(megabatch=0)
+                monitor.start()
+                mh.attach_liveness(monitor)
+                mh.rendezvous()
+
     if args.workload == "xml":
         model, provider, test_batches = build_xml_workload(args)
     else:
@@ -231,7 +281,7 @@ def main(argv=None):
     else:
         speed = SpeedModel(ecfg.n_replicas, max_gap=args.hetero, seed=args.seed)
     mesh = None
-    if args.placement == "sharded" and schedule is None:
+    if args.placement == "sharded" and schedule is None and mh is None:
         # with an elastic schedule the trainer owns the mesh: it draws
         # per-population meshes from the full local device pool as R changes
         from repro.launch.mesh import make_replica_mesh
@@ -244,14 +294,15 @@ def main(argv=None):
         model=model, provider=provider, cfg=ecfg,
         sgd=SGDConfig(), base_lr=args.lr, speed=speed, seed=args.seed,
         engine=args.engine, sparse_grads=not args.dense_grads, mesh=mesh,
-        overlap=args.overlap == "on",
+        overlap=args.overlap == "on", multihost=mh,
     )
     fleet = None
-    if args.faults or args.timeout_factor > 0:
+    if args.faults or args.timeout_factor > 0 or monitor is not None:
         from repro.core.fleet import FleetController, parse_fault_spec
 
         fleet = FleetController(
             injector=parse_fault_spec(args.faults) if args.faults else None,
+            monitor=monitor,
             min_replicas=args.min_replicas,
             max_replicas=args.max_replicas or 2 * ecfg.n_replicas,
             timeout_factor=args.timeout_factor,
@@ -264,12 +315,21 @@ def main(argv=None):
         manager = CheckpointManager(
             args.checkpoint_dir, every=args.checkpoint_every,
             retain=args.checkpoint_retain,
+            publisher=mh is None or mh.process_id == 0,
         )
-    state, mlog = trainer.run(
-        args.megabatches, test_batches=test_batches, verbose=True,
-        resize_schedule=schedule, fleet=fleet, checkpoint=manager,
-        restore_from=args.restore_from or None,
-    )
+    try:
+        state, mlog = trainer.run(
+            args.megabatches, test_batches=test_batches, verbose=True,
+            resize_schedule=schedule, fleet=fleet, checkpoint=manager,
+            restore_from=args.restore_from or None,
+        )
+    finally:
+        if monitor is not None:
+            monitor.stop()
+    if monitor is not None:
+        # completed: flip the lease to 'done' so survivors treat our exit
+        # as orderly, not as a missed deadline
+        monitor.renew(status="done")
     final = mlog.records[-1] if mlog.records else {}
     log("final",
         algorithm=args.algorithm,

@@ -38,12 +38,31 @@ def replica_mesh_size(n_replicas: int, n_devices: int) -> int:
                 if n_replicas % d == 0)
 
 
+def global_replica_devices() -> list:
+    """All devices across every ``jax.distributed``-attached process, in a
+    deterministic fleet order: sorted by ``(process_index, id)`` so each
+    process's devices form one contiguous block and every process derives
+    the identical list. This is the device list a multi-host (device-span)
+    replica mesh is built from — slot block *p* of the replica dimension
+    lands on process *p*'s accelerators.
+
+    In a single-process run this is just ``jax.devices()`` reordered, so
+    it is safe to call unconditionally.
+    """
+    return sorted(
+        jax.devices(), key=lambda d: (d.process_index, d.id)
+    )
+
+
 def replica_mesh(n_replicas: int, devices=None) -> Mesh:
     """1-D ``(replica,)`` mesh for the sharded replica executor.
 
     On one device this degenerates to a size-1 mesh — the shard_map path
     still runs, with every collective a no-op, which is what the
-    single-process parity tests exercise.
+    single-process parity tests exercise. Pass
+    ``devices=global_replica_devices()`` after ``jax.distributed``
+    initialization to span the mesh across processes (the jitted round
+    body is SPMD already; only the device list changes).
     """
     devices = list(jax.devices() if devices is None else devices)
     n = replica_mesh_size(n_replicas, len(devices))
@@ -63,6 +82,11 @@ class ReplicaMeshPool:
     zero-recompile contract). Shard counts are picked by
     ``replica_mesh_size`` — the largest device count dividing R — so every
     shard always owns an equal replica slice.
+
+    Multi-host (device span): construct with
+    ``ReplicaMeshPool(global_replica_devices())`` so every process builds
+    meshes over the identical cross-process device list — required for the
+    SPMD executors to agree on layout.
     """
 
     def __init__(self, devices=None):

@@ -189,7 +189,7 @@ def test_traced_surface_covers_known_modules():
     traced = {f.qualname for f in project.callgraph.traced_functions()}
     for expected in (
         "repro.core.trainer:ElasticTrainer._build_jits.round_body",
-        "repro.core.trainer:ElasticTrainer._build_jits.megabatch_fn",
+        "repro.core.trainer:ElasticTrainer._build_jits.make_megabatch_fn.megabatch_fn",
         "repro.optim.sgd:sgd_update",
         "repro.utils.tree:tree_map",
         "repro.core.algorithms.sync:mean_grads",

@@ -1,0 +1,539 @@
+"""Multi-host fleet tests (DESIGN.md §10).
+
+Three layers:
+
+* :class:`HeartbeatMonitor` under a fake clock — lease renewal, missed
+  deadlines, flapping, rejoin backoff, tombstones — no real sleeps;
+* :class:`FleetController` consuming monitor events through a stub
+  trainer (the heartbeat → eviction path, no injector involved);
+* :class:`MultihostContext` — slot blocks, the file exchange (two
+  contexts in threads), peer-death drop, event agreement;
+* subprocess end-to-end (``slow``): a two-process fleet matches the
+  single-process sharded trajectory, and a SIGKILLed process is evicted
+  via the heartbeat path while the survivor completes the run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.fleet import (
+    FleetController,
+    HeartbeatMonitor,
+    read_leases,
+    write_lease,
+)
+from repro.launch.multihost import (
+    MultihostSpec,
+    ProcessCondemned,
+    bootstrap,
+    spec_from_env,
+)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def make_monitor(tmp_path, clock, process_id=None, **kw):
+    kw.setdefault("grace", 3.0)
+    kw.setdefault("rejoin_backoff", 2)
+    return HeartbeatMonitor(
+        str(tmp_path), process_id=process_id, clock=clock, **kw
+    )
+
+
+# ---------------------------------------------------------------------------
+# lease files
+
+
+def test_write_and_read_leases(tmp_path):
+    d = str(tmp_path)
+    write_lease(d, 0, 1, megabatch=7)
+    write_lease(d, 1, 4, status="leaving")
+    (tmp_path / "junk.json").write_text("{not json")
+    (tmp_path / "README").write_text("ignore me")
+    leases = read_leases(d)
+    assert set(leases) == {0, 1}
+    assert leases[0]["megabatch"] == 7
+    assert leases[1]["status"] == "leaving"
+
+
+def test_write_lease_rejects_unknown_status(tmp_path):
+    with pytest.raises(ValueError):
+        write_lease(str(tmp_path), 0, 1, status="zombie")
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor under a fake clock
+
+
+def test_renewing_peer_stays_live(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew(megabatch=0)
+    for mb in range(5):
+        mon.renew(megabatch=mb)
+        assert mon.poll(mb) == []
+        clock.advance(2.0)          # < grace, renewed every boundary
+        peer.renew(megabatch=mb)
+    assert mon.live_processes() == {0, 1}
+    assert mon.last_megabatch(1) == 4
+
+
+def test_missed_deadline_is_a_crash_reported_once(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    assert mon.poll(0) == []        # lease observed fresh
+    clock.advance(3.5)              # > grace, never renewed
+    events = mon.poll(1)
+    assert [(e.kind, e.process) for e in events] == [("crash", 1)]
+    assert mon.poll(2) == []        # dead peers are not re-reported
+    assert not mon.peer_fresh(1)
+
+
+def test_flap_inside_grace_is_not_an_event(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    assert mon.poll(0) == []
+    clock.advance(2.9)              # one long mega-batch, still in grace
+    peer.renew()
+    assert mon.poll(1) == []        # renewal resets the staleness clock
+    clock.advance(2.9)
+    assert mon.poll(2) == []
+
+
+def test_rejoin_waits_out_the_backoff(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    mon.poll(0)
+    clock.advance(4.0)
+    assert [e.kind for e in mon.poll(2)] == ["crash"]   # evicted at mb=2
+    peer.renew()                    # the process is back...
+    assert mon.poll(3) == []        # ...but 3 - 2 < rejoin_backoff (2)
+    clock.advance(0.5)
+    peer.renew()
+    events = mon.poll(4)            # 4 - 2 >= backoff -> join
+    assert [(e.kind, e.process) for e in events] == [("join", 1)]
+    assert mon.poll(5) == []        # live again, nothing to report
+
+
+def test_leaving_status_is_a_preempt(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew(status="leaving")
+    events = mon.poll(0)
+    assert [(e.kind, e.process) for e in events] == [("preempt", 1)]
+    assert mon.poll(1) == []
+
+
+def test_done_status_is_a_clean_exit(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew(status="done")
+    assert mon.poll(0) == []
+    clock.advance(10.0)             # staleness after 'done' is not a crash
+    assert mon.poll(1) == []
+    assert 1 not in mon.live_processes()
+
+
+def test_tombstone_outranks_a_fresh_lease(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    mon.poll(0)
+    (tmp_path / "condemned" / "p1").write_text("")
+    events = mon.poll(1)
+    assert [(e.kind, e.process) for e in events] == [("crash", 1)]
+
+
+def test_condemned_self_raises(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    mon.renew()
+    (tmp_path / "condemned" / "p0").write_text("")
+    with pytest.raises(RuntimeError, match="condemned"):
+        mon.poll(0)
+
+
+def test_background_renewal_thread_uses_real_time(tmp_path):
+    mon = HeartbeatMonitor(str(tmp_path), process_id=0, interval=0.01)
+    mon.renew(megabatch=0)
+    first = read_leases(mon.leases_dir)[0]["counter"]
+    mon.start()
+    try:
+        for _ in range(100):
+            if read_leases(mon.leases_dir)[0]["counter"] > first:
+                break
+            time.sleep(0.02)
+        else:
+            pytest.fail("renewal thread never renewed")
+    finally:
+        mon.stop()
+
+
+# ---------------------------------------------------------------------------
+# FleetController consuming monitor events (stub trainer, no injector)
+
+
+class _StubAlgo:
+    resize_policy = "merge"
+
+
+class _StubCfg:
+    def __init__(self, n):
+        self.n_replicas = n
+
+
+class _StubTrainer:
+    """Records membership calls; mimics the trainer's width bookkeeping."""
+
+    def __init__(self, n):
+        self.cfg = _StubCfg(n)
+        self.algo = _StubAlgo()
+        self.calls = []
+
+    def remove_replicas(self, state, slots, merge_leavers=False):
+        self.calls.append(("remove", tuple(slots), merge_leavers))
+        self.cfg.n_replicas -= len(slots)
+        return state
+
+    def resize(self, state, n):
+        self.calls.append(("resize", n))
+        self.cfg.n_replicas = n
+        return state
+
+    def invalidate_prefetch(self):
+        pass
+
+
+def test_controller_evicts_dead_process_via_slot_map(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(
+        tmp_path, clock, process_id=0, slot_map={0: [0, 1], 1: [2, 3]}
+    )
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    fleet = FleetController(monitor=mon, verbose=False)
+    trainer = _StubTrainer(4)
+    fleet.step(trainer, "state", 1)
+    assert trainer.calls == []
+    clock.advance(4.0)              # peer dies silently
+    fleet.step(trainer, "state", 2)
+    assert trainer.calls == [("remove", (2, 3), False)]
+    assert trainer.cfg.n_replicas == 2
+    # the monitor path queues no quarantine: no injector-style rejoin
+    fleet.step(trainer, "state", 3)
+    fleet.step(trainer, "state", 10)
+    assert trainer.calls == [("remove", (2, 3), False)]
+
+
+def test_controller_readmits_on_lease_resume(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(
+        tmp_path, clock, process_id=0, slot_map={0: [0, 1], 1: [2, 3]}
+    )
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    fleet = FleetController(monitor=mon, max_replicas=8, verbose=False)
+    trainer = _StubTrainer(4)
+    fleet.step(trainer, "state", 1)
+    clock.advance(4.0)
+    fleet.step(trainer, "state", 2)         # evicted at mb=2
+    peer.renew()                            # lease resumes
+    fleet.step(trainer, "state", 3)         # inside backoff: nothing
+    clock.advance(0.5)
+    peer.renew()
+    fleet.step(trainer, "state", 4)         # backoff elapsed: join
+    assert trainer.calls == [("remove", (2, 3), False), ("resize", 4)]
+
+
+def test_controller_preempt_merges_leavers(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(
+        tmp_path, clock, process_id=0, slot_map={1: [2, 3]}
+    )
+    write_lease(mon.leases_dir, 1, 1, status="leaving")
+    fleet = FleetController(monitor=mon, verbose=False)
+    trainer = _StubTrainer(4)
+    fleet.step(trainer, "state", 1)
+    assert trainer.calls == [("remove", (2, 3), True)]
+
+
+def test_controller_respects_min_replicas(tmp_path):
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0, slot_map={1: [2, 3]})
+    peer = make_monitor(tmp_path, clock, process_id=1)
+    peer.renew()
+    fleet = FleetController(monitor=mon, min_replicas=3, verbose=False)
+    trainer = _StubTrainer(4)
+    fleet.step(trainer, "state", 1)
+    clock.advance(4.0)
+    fleet.step(trainer, "state", 2)   # 4 - 2 < min_replicas: skip
+    assert trainer.calls == []
+    assert trainer.cfg.n_replicas == 4
+
+
+# ---------------------------------------------------------------------------
+# MultihostContext: specs, slots, the file exchange
+
+
+def test_spec_from_env_roundtrip(tmp_path):
+    assert spec_from_env({}) is None
+    env = {
+        "REPRO_MH_NUM_PROCESSES": "2",
+        "REPRO_MH_PROCESS_ID": "1",
+        "REPRO_MH_FLEET_DIR": str(tmp_path),
+    }
+    spec = spec_from_env(env)
+    assert spec == MultihostSpec(
+        num_processes=2, process_id=1, fleet_dir=str(tmp_path)
+    )
+    with pytest.raises(ValueError):
+        MultihostSpec(num_processes=2, process_id=5, fleet_dir=str(tmp_path))
+
+
+def _ctx(tmp_path, pid, n=2):
+    spec = MultihostSpec(
+        num_processes=n, process_id=pid, fleet_dir=str(tmp_path),
+        spanning="host",
+    )
+    return bootstrap(spec)
+
+
+def test_slot_blocks(tmp_path):
+    ctx = _ctx(tmp_path, 0)
+    ctx.assign_slots(4)
+    assert ctx.local_bounds() == (0, 2)
+    assert ctx.bounds_of(1) == (2, 4)
+    assert ctx.slots_of(1) == [2, 3]
+    assert ctx.processes_for_slots([2, 3]) == [1]
+    with pytest.raises(ValueError):
+        ctx.processes_for_slots([1, 2])   # tears a block
+    with pytest.raises(ValueError):
+        ctx.assign_slots(3)               # not divisible
+    with pytest.raises(ProcessCondemned):
+        ctx.processes_for_slots([0, 1])   # dropping *our* block
+
+
+def test_remove_process_renumbers_survivors_first(tmp_path):
+    ctx = _ctx(tmp_path, 0, n=3)
+    ctx.assign_slots(6)
+    ctx.remove_process(1)
+    assert ctx.active_processes() == [0, 2]
+    assert 1 in ctx.condemned()
+    ctx.assign_slots(4)
+    assert ctx.bounds_of(0) == (0, 2)
+    assert ctx.bounds_of(2) == (2, 4)
+
+
+def test_exchange_allreduce_and_allgather(tmp_path):
+    c0, c1 = _ctx(tmp_path, 0), _ctx(tmp_path, 1)
+    results = {}
+
+    def run(pid, ctx):
+        tree = {"x": np.full(3, float(pid + 1)), "n": np.float64(pid)}
+        results[pid] = (
+            ctx.allreduce_sum("t", tree),
+            ctx.allgather("g", np.asarray([pid])),
+        )
+
+    threads = [
+        threading.Thread(target=run, args=(p, c))
+        for p, c in ((0, c0), (1, c1))
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for pid in (0, 1):
+        (tree, contributors), gathered = results[pid]
+        assert contributors == [0, 1]
+        np.testing.assert_allclose(tree["x"], np.full(3, 3.0))
+        assert float(tree["n"]) == 1.0
+        assert sorted(gathered) == [0, 1]
+        assert int(gathered[1][0]) == 1
+
+
+class _DeadPeerLiveness:
+    """Exchange wait predicate stub: peer 1 is gone."""
+
+    def __init__(self):
+        self.condemned = []
+
+    def peer_fresh(self, pid):
+        return pid != 1
+
+    def note_condemned(self, pid):
+        self.condemned.append(pid)
+
+
+def test_exchange_drops_stale_peer_and_condemns_it(tmp_path):
+    ctx = _ctx(tmp_path, 0)
+    liveness = _DeadPeerLiveness()
+    ctx.attach_liveness(liveness)
+    tree, contributors = ctx.allreduce_sum("t", {"x": np.ones(2)})
+    assert contributors == [0]
+    np.testing.assert_allclose(tree["x"], np.ones(2))
+    assert liveness.condemned == [1]
+    assert os.path.exists(os.path.join(str(tmp_path), "condemned", "p1"))
+    # once condemned, a later exchange never waits for it again
+    tree, contributors = ctx.allreduce_sum("t2", {"x": np.ones(2)})
+    assert contributors == [0]
+
+
+def test_agree_events_union_and_self_condemnation(tmp_path):
+    from repro.core.fleet import FaultEvent
+
+    c0, c1 = _ctx(tmp_path, 0), _ctx(tmp_path, 1)
+    out = {}
+
+    def run(pid, ctx, events):
+        try:
+            out[pid] = ctx.agree_events(events)
+        except ProcessCondemned as e:
+            out[pid] = e
+
+    # process 0 proposes evicting process 1 (whose own view is clean):
+    # the union must reach both — 0 applies it, 1 stops participating.
+    t0 = threading.Thread(
+        target=run, args=(0, c0, [FaultEvent("crash", process=1)])
+    )
+    t1 = threading.Thread(target=run, args=(1, c1, []))
+    t0.start()
+    t1.start()
+    t0.join()
+    t1.join()
+    assert [(e.kind, e.process) for e in out[0]] == [("crash", 1)]
+    assert isinstance(out[1], ProcessCondemned)
+
+
+def test_single_process_exchange_short_circuits(tmp_path):
+    ctx = _ctx(tmp_path, 0, n=1)
+    tree, contributors = ctx.allreduce_sum("t", {"x": np.ones(2)})
+    assert contributors == [0]
+    gathered = ctx.allgather("g", np.ones(1))
+    assert list(gathered) == [0]
+
+
+# ---------------------------------------------------------------------------
+# subprocess end-to-end
+
+
+MEGABATCHES = 5
+LOSS_RE = re.compile(r"\[repro\] \[adaptive\] mb=(\d+) loss=([^ ]+)")
+
+
+def _root():
+    return os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env(device_count=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(_root(), "src"), env.get("PYTHONPATH", "")]
+    )
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    if device_count is not None:
+        env["XLA_FLAGS"] = (
+            f"{env.get('XLA_FLAGS', '')} "
+            f"--xla_force_host_platform_device_count={device_count}"
+        ).strip()
+        env.pop("REPRO_MH_NUM_PROCESSES", None)
+    return env
+
+
+def _workload_args(megabatches=MEGABATCHES):
+    return [
+        "--workload", "xml", "--samples", "1024", "--features", "256",
+        "--classes", "64", "--hidden", "32", "--b-max", "32",
+        "--mega-batch", "6", "--replicas", "4", "--algorithm", "adaptive",
+        "--megabatches", str(megabatches), "--seed", "0",
+    ]
+
+
+def _losses(text):
+    return {int(m.group(1)): float(m.group(2)) for m in LOSS_RE.finditer(text)}
+
+
+def _launch(tmp_path, extra, train_extra, megabatches=MEGABATCHES):
+    fleet_dir = str(tmp_path / "fleet")
+    cmd = [
+        sys.executable, os.path.join(_root(), "scripts", "multihost_launch.py"),
+        "--procs", "2", "--devices-per-proc", "2",
+        "--fleet-dir", fleet_dir, "--timeout", "600",
+        *extra, "--", *_workload_args(megabatches), *train_extra,
+    ]
+    res = subprocess.run(
+        cmd, capture_output=True, text=True, env=_env(), timeout=700,
+    )
+    logs = {}
+    for pid in (0, 1):
+        path = os.path.join(fleet_dir, "logs", f"proc{pid}.log")
+        logs[pid] = open(path).read() if os.path.exists(path) else ""
+    return res, logs
+
+
+@pytest.mark.slow
+def test_two_process_run_matches_single_process_trajectory(tmp_path):
+    ref = subprocess.run(
+        [sys.executable, "-u", "-m", "repro.launch.train",
+         *_workload_args(), "--placement", "sharded", "--multihost", "off"],
+        capture_output=True, text=True, env=_env(device_count=4), timeout=600,
+    )
+    assert ref.returncode == 0, ref.stderr[-4000:]
+    ref_losses = _losses(ref.stderr)
+    assert sorted(ref_losses) == list(range(1, MEGABATCHES + 1))
+
+    res, logs = _launch(tmp_path, [], [])
+    assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
+    for pid in (0, 1):
+        mh_losses = _losses(logs[pid])
+        assert sorted(mh_losses) == list(range(1, MEGABATCHES + 1)), logs[pid][-2000:]
+        for mb, ref_loss in ref_losses.items():
+            assert abs(mh_losses[mb] - ref_loss) <= 2e-3 * (1 + abs(ref_loss)), (
+                f"proc {pid} mb={mb}: {mh_losses[mb]} vs ref {ref_loss}"
+            )
+
+
+@pytest.mark.slow
+def test_sigkill_heals_through_heartbeat_path(tmp_path):
+    res, logs = _launch(
+        tmp_path,
+        ["--kill-proc", "1", "--kill-after-mb", "2"],
+        ["--heartbeat-interval", "0.3", "--heartbeat-grace", "2.0"],
+        megabatches=8,
+    )
+    assert res.returncode == 0, res.stdout[-4000:] + res.stderr[-2000:]
+    survivor = logs[0]
+    # the eviction came from the heartbeat -> FleetController path
+    assert "action=evict" in survivor and "process=1" in survivor, survivor[-3000:]
+    assert "crash" in survivor
+    # training completed at the reduced width
+    assert f"mb={8} " in survivor or "mb=8 " in survivor, survivor[-3000:]
+    assert "final" in survivor
