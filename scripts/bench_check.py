@@ -195,6 +195,7 @@ def main(argv=None) -> int:
     files = args.files or [os.path.join(repo_root, f) for f in BENCH_FILES]
 
     failures: list[str] = []
+    checked: list[tuple[str, int]] = []  # (family, n metrics) per file
     for path in files:
         name = os.path.basename(path)
         try:
@@ -215,7 +216,12 @@ def main(argv=None) -> int:
         for line in table:      # drift trajectory, printed on pass AND fail
             print(line)
         failures.extend(msgs)
+        checked.append((name.removeprefix("BENCH_").removesuffix(".json"), n))
 
+    # one greppable line naming every benchmark family this run gated — a
+    # file list that silently shrank must be visible in the log, not lore
+    print("[bench_check] families checked: "
+          + ", ".join(f"{fam} ({n} metrics)" for fam, n in checked))
     for msg in failures:
         print(f"[bench_check] REGRESSION {msg}", file=sys.stderr)
     if failures:

@@ -266,6 +266,9 @@ class CheckpointManager:
         self.async_write = bool(async_write)
         self.publisher = bool(publisher)
         self._thread: Optional[threading.Thread] = None
+        # guards _error only: it is the one attribute both the writer
+        # thread and the host thread touch (everything else is host-only)
+        self._lock = threading.Lock()
         self._error: Optional[BaseException] = None
         self._last_saved: Optional[int] = None
 
@@ -315,7 +318,8 @@ class CheckpointManager:
             save(path, snapshot, metadata=meta)
             self._sweep_retention(keep_path=path)
         except BaseException as e:  # surfaced on the next host-thread call
-            self._error = e
+            with self._lock:
+                self._error = e
 
     def wait(self) -> None:
         """Block until the in-flight write (if any) has published."""
@@ -325,8 +329,11 @@ class CheckpointManager:
         self._reraise()
 
     def _reraise(self) -> None:
-        if self._error is not None:
+        # check-and-clear must be atomic: two callers racing through a bare
+        # `if self._error` could both claim (or double-raise) one failure
+        with self._lock:
             err, self._error = self._error, None
+        if err is not None:
             raise CheckpointError(f"background checkpoint write failed: {err}") from err
 
     def _sweep_retention(self, keep_path: str) -> None:

@@ -273,6 +273,7 @@ class HeartbeatMonitor:
         self.slot_map = slot_map
         self._counter = 0
         self._megabatch = 0
+        self._status = "live"
         self._lock = threading.Lock()
         # pid -> [counter, status, changed_at (local clock), payload]
         self._seen: dict[int, list] = {}
@@ -284,15 +285,24 @@ class HeartbeatMonitor:
 
     # -- own lease -----------------------------------------------------
     def renew(self, megabatch: Optional[int] = None,
-              status: str = "live") -> None:
+              status: Optional[str] = None) -> None:
+        """Publish a fresh lease. ``status`` is *sticky*: once a caller
+        announces ``'leaving'``/``'done'``, the daemon renewals (which pass
+        no status) keep republishing it — a per-call default of ``'live'``
+        would let a concurrent renewal resurrect an announced departure."""
         if self.process_id is None:
             return
         with self._lock:
             self._counter += 1
             if megabatch is not None:
                 self._megabatch = int(megabatch)
-            write_lease(self.leases_dir, self.process_id, self._counter,
-                        status=status, megabatch=self._megabatch)
+            if status is not None:
+                self._status = str(status)
+            # the lease write must stay ordered with the counter it stamps:
+            # publishing outside the lock could emit counters out of order
+            # and make a fresh lease look stale to peers
+            write_lease(self.leases_dir, self.process_id, self._counter,  # jaxlint: disable=JL104 — lease publish must stay ordered with the counter it stamps
+                        status=self._status, megabatch=self._megabatch)
 
     def start(self) -> None:
         """Renew in a daemon thread every ``interval`` seconds, so long

@@ -16,6 +16,7 @@ algorithm only ever sees *relative speeds*, exactly as in the paper.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable
@@ -381,28 +382,37 @@ class ShardWindowTimer:
 
     def __init__(self, timer: Callable[[], float] = time.perf_counter):
         self.timer = timer
+        # jax.debug.callback may fire from runtime callback threads, so the
+        # marker dicts and take()'s swap are lock-guarded (JL106/JL101); the
+        # first-wins check in mark_start must be atomic with its set
+        self._lock = threading.Lock()
         self._n = 0
         self._t0: dict[int, float] = {}
         self._t1: dict[int, float] = {}
 
     def reset(self, n_shards: int) -> None:
         """Open a measurement window expecting markers from n_shards."""
-        self._n = int(n_shards)
-        self._t0 = {}
-        self._t1 = {}
+        with self._lock:
+            self._n = int(n_shards)
+            self._t0 = {}
+            self._t1 = {}
 
     def mark_start(self, shard) -> None:
         s = int(shard)
-        if s not in self._t0:   # first callback opens the shard's window
-            self._t0[s] = self.timer()
+        with self._lock:
+            if s not in self._t0:   # first callback opens the shard's window
+                self._t0[s] = self.timer()
 
     def mark_end(self, shard) -> None:
-        self._t1[int(shard)] = self.timer()  # last callback closes it
+        s = int(shard)
+        with self._lock:
+            self._t1[s] = self.timer()  # last callback closes it
 
     def take(self) -> np.ndarray | None:
         """(n_shards,) window seconds, or None if any marker is missing."""
-        n, t0, t1 = self._n, self._t0, self._t1
-        self._n, self._t0, self._t1 = 0, {}, {}
+        with self._lock:
+            n, t0, t1 = self._n, self._t0, self._t1
+            self._n, self._t0, self._t1 = 0, {}, {}
         if n == 0 or set(t0) != set(range(n)) or set(t1) != set(range(n)):
             return None
         w = np.array([t1[s] - t0[s] for s in range(n)], np.float64)

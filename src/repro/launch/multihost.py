@@ -186,6 +186,10 @@ class MultihostContext:
         self._liveness: Optional[Any] = None
         self.poll_interval = 0.05
         self.exchange_timeout = 300.0
+        # injectable (JL105): tests drive exchange/rendezvous timeouts with
+        # a fake clock instead of real 300 s waits
+        self._clock = time.monotonic
+        self._sleep = time.sleep
 
     # -- membership bookkeeping ---------------------------------------
     def attach_liveness(self, monitor) -> None:
@@ -314,7 +318,7 @@ class MultihostContext:
         n_leaves = len(leaves)
         got: dict[int, list] = {self.process_id: leaves}
         expected = set(self._active) - {self.process_id} - self.condemned()
-        deadline = time.monotonic() + self.exchange_timeout
+        deadline = self._clock() + self.exchange_timeout
         while expected - set(got):
             for pid in sorted(expected - set(got)):
                 path = os.path.join(d, f"p{pid}.npz")
@@ -339,13 +343,13 @@ class MultihostContext:
                     dropped = True
             if dropped:
                 continue
-            if time.monotonic() > deadline:
+            if self._clock() > deadline:
                 raise RuntimeError(
                     f"exchange s{seq}-{tag} timed out waiting for "
                     f"processes {sorted(missing)}"
                 )
             self.check_condemned()
-            time.sleep(self.poll_interval)
+            self._sleep(self.poll_interval)
 
         # retire own files old enough that every live peer has moved past
         # them (each process deletes only what it wrote — no delete races)
@@ -432,18 +436,18 @@ class MultihostContext:
         from repro.core.fleet import read_leases
 
         leases_dir = os.path.join(self.fleet_dir, "leases")
-        deadline = time.monotonic() + timeout
+        deadline = self._clock() + timeout
         want = set(range(self.n_processes))
         while True:
             if want <= set(read_leases(leases_dir)):
                 return
-            if time.monotonic() > deadline:
+            if self._clock() > deadline:
                 missing = sorted(want - set(read_leases(leases_dir)))
                 raise RuntimeError(
                     f"multihost rendezvous timed out; processes {missing} "
                     f"never published a lease under {leases_dir}"
                 )
-            time.sleep(self.poll_interval)
+            self._sleep(self.poll_interval)
 
     # -- device span helpers ------------------------------------------
     def global_devices(self) -> list:

@@ -1,0 +1,325 @@
+"""InterleaveSentinel suite (ISSUE 10): the runtime half of the
+concurrency family.
+
+Layers:
+
+* scheduler semantics — determinism (same seed → same schedule → same
+  outcome), seed diversity, deadlock detection, cooperative lock mutual
+  exclusion, virtual-time event waits, thread-error propagation;
+* regressions against real units — each test drives a pre-existing
+  concurrency defect fixed in this PR and asserts the post-fix invariant
+  over *every* explored interleaving:
+    - HeartbeatMonitor: a concurrent daemon renewal must not resurrect
+      ``status="live"`` over an announced ``"leaving"`` (sticky status);
+    - CheckpointManager: exactly one caller claims a writer-thread error
+      (atomic check-and-clear in ``_reraise``);
+    - ShardWindowTimer: concurrent start markers take exactly one
+      timestamp (first-wins is atomic with its check);
+* exploration — StagingBuffers' busy latch holds under every schedule.
+
+The sentinel fully serializes its threads, so these tests are exact, not
+probabilistic: a failure names the seed, and rerunning that seed replays
+the identical schedule.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from tools.jaxlint.interleave import (  # noqa: E402
+    InterleaveError,
+    InterleaveSentinel,
+)
+
+SEEDS = range(8)
+
+
+# --------------------------------------------------------------------------
+# scheduler semantics
+# --------------------------------------------------------------------------
+
+
+def _racy_counter(seed: int, locked: bool):
+    """Two threads do read-modify-write ×3 each; unguarded, a seed may
+    lose updates. Returns (schedule, final_count)."""
+    sent = InterleaveSentinel(seed=seed)
+    lock = sent.lock("counter") if locked else None
+    state = {"x": 0}
+
+    def body(name):
+        for _ in range(3):
+            if locked:
+                with lock:
+                    v = state["x"]
+                    sent.yield_point(f"{name}-rmw")
+                    state["x"] = v + 1
+            else:
+                v = state["x"]
+                sent.yield_point(f"{name}-rmw")
+                state["x"] = v + 1
+
+    sent.spawn("a", body, "a")
+    sent.spawn("b", body, "b")
+    sent.run()
+    return tuple(sent.schedule), state["x"]
+
+
+def test_same_seed_same_schedule_same_outcome():
+    s1, x1 = _racy_counter(7, locked=False)
+    s2, x2 = _racy_counter(7, locked=False)
+    assert s1 == s2 and x1 == x2
+
+
+def test_seeds_explore_distinct_interleavings():
+    schedules = {_racy_counter(s, locked=False)[0] for s in SEEDS}
+    assert len(schedules) > 1
+
+
+def test_unguarded_rmw_loses_updates_on_some_seed():
+    finals = [_racy_counter(s, locked=False)[1] for s in SEEDS]
+    assert any(x < 6 for x in finals), finals
+
+
+def test_sentinel_lock_restores_atomicity_on_every_seed():
+    finals = [_racy_counter(s, locked=True)[1] for s in SEEDS]
+    assert all(x == 6 for x in finals), finals
+
+
+def test_deadlock_is_detected_deterministically():
+    def run_once(seed):
+        sent = InterleaveSentinel(seed=seed)
+        l1, l2 = sent.lock("l1"), sent.lock("l2")
+
+        def ab():
+            with l1:
+                sent.yield_point("got l1")
+                with l2:
+                    pass
+
+        def ba():
+            with l2:
+                sent.yield_point("got l2")
+                with l1:
+                    pass
+
+        sent.spawn("ab", ab)
+        sent.spawn("ba", ba)
+        sent.run(timeout=10)
+
+    hit = []
+    for seed in SEEDS:
+        try:
+            run_once(seed)
+        except InterleaveError as e:
+            assert "deadlock" in str(e)
+            hit.append(seed)
+    assert hit, "no seed produced the lock-order deadlock"
+    # and the detection itself is deterministic per seed
+    with pytest.raises(InterleaveError, match="deadlock"):
+        run_once(hit[0])
+
+
+def test_event_timed_wait_is_virtual():
+    """A timed wait never parks: sentinel time is virtual, the timeout is
+    deemed elapsed and the flag state is returned immediately."""
+    sent = InterleaveSentinel(seed=0)
+    ev = sent.event("go")
+    seen = []
+
+    def solo():
+        seen.append(ev.wait(timeout=300.0))  # unset: returns False, no sleep
+        ev.set()
+        seen.append(ev.wait(timeout=300.0))  # set: returns True
+
+    sent.spawn("solo", solo)
+    sent.run(timeout=10)
+    assert seen == [False, True]
+
+
+def test_event_untimed_wait_blocks_until_set():
+    sent = InterleaveSentinel(seed=0)
+    ev = sent.event("go")
+    order = []
+
+    def waiter():
+        ev.wait()  # untimed: parks until the setter runs
+        order.append("woke")
+
+    def setter():
+        order.append("set")
+        ev.set()
+
+    sent.spawn("waiter", waiter)
+    sent.spawn("setter", setter)
+    sent.run(timeout=10)
+    assert order == ["set", "woke"]
+
+
+def test_thread_exception_reraised_from_run():
+    sent = InterleaveSentinel(seed=0)
+
+    def boom():
+        raise ValueError("inner failure")
+
+    sent.spawn("boom", boom)
+    with pytest.raises(ValueError, match="inner failure"):
+        sent.run(timeout=10)
+
+
+# --------------------------------------------------------------------------
+# regression: HeartbeatMonitor sticky status (the ISSUE 10 defect)
+# --------------------------------------------------------------------------
+
+
+def _lease_status(mon):
+    from repro.core.fleet import LEASE_PREFIX
+
+    path = os.path.join(mon.leases_dir, f"{LEASE_PREFIX}{mon.process_id}.json")
+    with open(path) as f:
+        return json.load(f)["status"]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_daemon_renewal_cannot_resurrect_announced_departure(tmp_path, seed):
+    """Pre-fix, ``renew`` took ``status`` as a per-call parameter
+    defaulting to "live": a daemon-thread renewal racing an announced
+    ``status="leaving"`` could publish "live" *last*, erasing the
+    departure peers act on. Post-fix the status is sticky monitor state —
+    every interleaving leaves "leaving" on disk."""
+    from repro.core.fleet import HeartbeatMonitor
+
+    mon = HeartbeatMonitor(str(tmp_path), process_id=0)
+    sent = InterleaveSentinel(seed=seed, trace=("repro/core/fleet.py",))
+    mon._lock = sent.lock("monitor")  # cooperative: scheduler keeps control
+    sent.spawn("main", mon.renew, status="leaving")
+    sent.spawn("daemon", mon.renew)  # the background loop's bare renew()
+    sent.run()
+    assert _lease_status(mon) == "leaving"
+
+
+# --------------------------------------------------------------------------
+# regression: CheckpointManager error conservation
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_checkpoint_error_claimed_exactly_once(tmp_path, monkeypatch, seed):
+    """Pre-fix ``_reraise`` did a bare check-then-swap: two concurrent
+    callers could both pass the check, double-raising one failure (the
+    second with ``None``). Post-fix the check-and-clear is atomic, so
+    exactly one caller claims the error under every interleaving."""
+    from repro.checkpoint import store as store_mod
+    from repro.checkpoint.store import CheckpointError, CheckpointManager
+
+    mgr = CheckpointManager(str(tmp_path), async_write=True)
+    sent = InterleaveSentinel(
+        seed=seed, trace=("repro/checkpoint/store.py",)
+    )
+    mgr._lock = sent.lock("store")
+
+    def failing_save(*a, **k):
+        raise RuntimeError("disk full")
+
+    monkeypatch.setattr(store_mod, "save", failing_save)
+    caught = []
+
+    def reader(tag):
+        try:
+            mgr._reraise()
+        except CheckpointError:
+            caught.append(tag)
+
+    sent.spawn("writer", mgr._write_job, str(tmp_path / "ckpt"), {}, {})
+    sent.spawn("r1", reader, "r1")
+    sent.spawn("r2", reader, "r2")
+    sent.run()
+    pending = 1 if mgr._error is not None else 0
+    assert len(caught) + pending == 1, (caught, mgr._error)
+
+
+# --------------------------------------------------------------------------
+# regression: ShardWindowTimer first-wins start marker
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_shard_timer_first_start_marker_wins_atomically(seed):
+    """Pre-fix ``mark_start`` was a bare check-then-set over ``_t0``: two
+    callback threads for the same shard could both pass the ``not in``
+    check and both stamp, so the *later* timestamp could win and shrink
+    the measured window. Post-fix the check is atomic with the set:
+    exactly one timer() call per shard, on every interleaving."""
+    from repro.core.heterogeneity import ShardWindowTimer
+
+    calls = []
+
+    def fake_timer():
+        calls.append(len(calls))
+        return float(len(calls))
+
+    t = ShardWindowTimer(timer=fake_timer)
+    sent = InterleaveSentinel(
+        seed=seed, trace=("repro/core/heterogeneity.py",)
+    )
+    if hasattr(t, "_lock"):
+        t._lock = sent.lock("timer")
+    t.reset(1)
+    sent.spawn("cb1", t.mark_start, 0)
+    sent.spawn("cb2", t.mark_start, 0)
+    sent.run()
+    assert len(calls) == 1, f"{len(calls)} timestamps for one shard"
+    t.mark_end(0)
+    w = t.take()
+    assert w is not None and np.all(w > 0)
+
+
+# --------------------------------------------------------------------------
+# exploration: StagingBuffers busy latch
+# --------------------------------------------------------------------------
+
+
+def test_staging_buffer_busy_latch_holds_under_every_schedule():
+    """Three producers race acquire→release over the two alternating
+    staging slots. Whatever the schedule: no two producers ever hold the
+    same slot at once (the latch raises instead of handing out an
+    in-flight buffer), and the seeds genuinely explore both the
+    fully-serialized and the latched orderings."""
+    from repro.data.batcher import StagingBuffers
+
+    spec = {"x": ((2, 2), np.float32)}
+    outcome_sets = set()
+    for seed in SEEDS:
+        bufs = StagingBuffers()
+        sent = InterleaveSentinel(seed=seed)
+        outcomes = []
+        in_flight: set[int] = set()
+
+        def producer(tag, sent=sent, bufs=bufs, outcomes=outcomes,
+                     in_flight=in_flight):
+            try:
+                slot_id, _ = bufs.acquire(spec)
+            except RuntimeError:
+                outcomes.append("latched")
+                return
+            assert slot_id not in in_flight, "double-acquired in-flight slot"
+            in_flight.add(slot_id)
+            sent.yield_point(f"{tag}-in-flight")
+            in_flight.discard(slot_id)
+            bufs.release(slot_id)
+            outcomes.append("ok")
+
+        for tag in ("p1", "p2", "p3"):
+            sent.spawn(tag, producer, tag)
+        sent.run()
+        assert len(outcomes) == 3
+        outcome_sets.add(tuple(sorted(outcomes)))
+    # exploration actually reached more than one protocol outcome
+    assert len(outcome_sets) > 1, outcome_sets

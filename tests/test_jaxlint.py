@@ -35,11 +35,17 @@ def lint_fixture(path: str, rule: str) -> engine.LintResult:
     return engine.lint([path], root=FIXTURES, select=[rule])
 
 
+# path-scoped rules: their fixtures must *live* under a matching module
+# path, so they ship as directories instead of flat files
+_DIR_FIXTURE_KINDS = {
+    ("JL006", "good"), ("JL102", "bad"), ("JL102", "good"),
+    ("JL105", "bad"), ("JL105", "good"),
+}
+
+
 def fixture_path(rule: str, kind: str) -> str:
-    if rule == "JL006" and kind == "good":
-        # the JL006 allowance is path-based: the good fixture must *live*
-        # in an approved timing-module path
-        return os.path.join(FIXTURES, "jl006_good")
+    if (rule, kind) in _DIR_FIXTURE_KINDS:
+        return os.path.join(FIXTURES, f"{rule.lower()}_{kind}")
     return os.path.join(FIXTURES, f"{rule}_{kind}.py")
 
 
@@ -70,7 +76,9 @@ def test_expected_bad_finding_counts():
     """Pin the per-fixture finding counts: a rule that silently stops
     seeing one of its violation shapes should fail loudly here."""
     expected = {"JL001": 4, "JL002": 3, "JL003": 1, "JL004": 3,
-                "JL005": 2, "JL006": 2, "JL007": 5}
+                "JL005": 2, "JL006": 2, "JL007": 5,
+                "JL101": 3, "JL102": 2, "JL103": 2, "JL104": 4,
+                "JL105": 2, "JL106": 2}
     got = {
         rule: len(lint_fixture(fixture_path(rule, "bad"), rule).findings)
         for rule in ALL_RULES
@@ -154,6 +162,98 @@ def test_cli_exit_codes(tmp_path, capsys):
     p.write_text("x = 1\n")
     assert main([str(p), "--root", str(tmp_path),
                  "--baseline", str(bl)]) == 0
+
+
+# --------------------------------------------------------------------------
+# rule families + new CLI surface (ISSUE 10)
+# --------------------------------------------------------------------------
+
+
+def test_rule_families_partition_the_registry():
+    fams = {rule: engine.rule_family(rule) for rule in ALL_RULES}
+    assert set(fams.values()) == set(engine.FAMILIES)
+    assert all(
+        f == ("concurrency" if int(r[2:]) >= 100 else "jit")
+        for r, f in fams.items()
+    )
+
+
+def test_family_selection_filters_rules(tmp_path):
+    # one JL006 (jit) violation + one JL103 (concurrency) violation
+    p = tmp_path / "mod.py"
+    p.write_text(
+        "import threading\n\nimport jax\n\n\n"
+        "def f(x, t):\n"
+        "    jax.debug.callback(t, x)\n"
+        "    worker = threading.Thread(target=f)\n"
+        "    worker.start()\n"
+        "    return x\n"
+    )
+    both = engine.lint([str(p)], root=str(tmp_path))
+    jit = engine.lint([str(p)], root=str(tmp_path), family="jit")
+    conc = engine.lint([str(p)], root=str(tmp_path), family="concurrency")
+    assert {f.rule for f in jit.findings} == {"JL006"}
+    assert {f.rule for f in conc.findings} == {"JL103"}
+    assert {f.rule for f in both.findings} == {"JL006", "JL103"}
+
+
+def test_cli_explain_prints_contract_and_fixtures(capsys):
+    assert main(["--explain", "JL104"]) == 0
+    out = capsys.readouterr().out
+    assert "JL104" in out and "concurrency" in out
+    assert "good fixture" in out and "bad fixture" in out
+
+    assert main(["--explain", "JL999"]) == 2
+
+
+def test_cli_github_format(tmp_path, capsys):
+    p = tmp_path / "mod.py"
+    p.write_text(_VIOLATION)
+    bl = tmp_path / "empty_baseline.txt"
+    bl.write_text("")
+    assert main([str(p), "--root", str(tmp_path), "--baseline", str(bl),
+                 "--format", "github"]) == 1
+    out = capsys.readouterr().out
+    assert out.startswith("::error file=")
+    assert "title=jaxlint JL006" in out
+
+
+def test_cli_internal_error_exit_code(tmp_path, monkeypatch, capsys):
+    """A crashing rule must exit 3 (broken linter), never 0 (clean)."""
+
+    class Broken:
+        code = "JL999"
+        summary = "always crashes"
+        family = "jit"
+
+        def run(self, project):
+            raise RuntimeError("boom")
+
+    monkeypatch.setitem(rules.RULES, "JL999", Broken)
+    p = tmp_path / "mod.py"
+    p.write_text("x = 1\n")
+    assert main([str(p), "--root", str(tmp_path),
+                 "--baseline", str(tmp_path / "none.txt")]) == 3
+    err = capsys.readouterr().err
+    assert "JL999" in err and "crashed" in err
+
+
+def test_concurrency_family_repo_sweep_is_clean():
+    """The new family's own self-check: src/benchmarks/scripts carry no
+    active JL1xx findings (fixes landed in this PR; the one accepted
+    exception is inline-disabled with a reason)."""
+    result = engine.lint(
+        ["src", "benchmarks", "scripts"],
+        root=REPO_ROOT,
+        baseline=engine.load_baseline(DEFAULT_BASELINE),
+        family="concurrency",
+    )
+    assert not result.errors and not result.internal_errors
+    assert result.findings == [], "\n".join(
+        f.render() for f in result.findings
+    )
+    # the JL104 lease-publish disable is load-bearing: it must exist
+    assert any(s.rule == "JL104" for s in result.suppressed)
 
 
 # --------------------------------------------------------------------------

@@ -537,3 +537,51 @@ def test_sigkill_heals_through_heartbeat_path(tmp_path):
     # training completed at the reduced width
     assert f"mb={8} " in survivor or "mb=8 " in survivor, survivor[-3000:]
     assert "final" in survivor
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 10 regressions: sticky lease status, injectable exchange clock
+# ---------------------------------------------------------------------------
+
+
+def test_renew_status_is_sticky(tmp_path):
+    """Once a process announces 'leaving'/'done', later renewals that pass
+    no status (the daemon loop's bare ``renew()``) must keep republishing
+    it — a per-call default of 'live' would resurrect the departure."""
+    clock = FakeClock()
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    mon.renew(megabatch=1)
+    assert read_leases(mon.leases_dir)[0]["status"] == "live"
+    mon.renew(status="leaving")
+    mon.renew(megabatch=2)          # daemon-style renewal: no status arg
+    lease = read_leases(mon.leases_dir)[0]
+    assert lease["status"] == "leaving"
+    assert lease["megabatch"] == 2  # liveness itself keeps flowing
+    mon.renew(status="done")
+    mon.renew()
+    assert read_leases(mon.leases_dir)[0]["status"] == "done"
+
+
+def test_rendezvous_times_out_on_fake_clock(tmp_path):
+    """The rendezvous/exchange wait loops run on injectable _clock/_sleep
+    (JL105): a missing peer times out in virtual time, no real sleeping."""
+    ctx = _ctx(tmp_path, 0)
+    clock = FakeClock()
+    ctx._clock = clock
+    ctx._sleep = lambda dt: clock.advance(dt)  # sleeping advances the clock
+    mon = make_monitor(tmp_path, clock, process_id=0)
+    mon.renew()                      # own lease only; peer 1 never appears
+    with pytest.raises(RuntimeError, match="rendezvous timed out"):
+        ctx.rendezvous(timeout=5.0)
+    assert clock.t >= 5.0            # the wait burned virtual, not real, time
+
+
+def test_exchange_times_out_on_fake_clock(tmp_path):
+    ctx = _ctx(tmp_path, 0)
+    clock = FakeClock()
+    ctx._clock = clock
+    ctx._sleep = lambda dt: clock.advance(dt)
+    ctx.exchange_timeout = 5.0
+    with pytest.raises(RuntimeError, match="timed out waiting for"):
+        ctx.allreduce_sum("t", [np.ones(2)])  # peer 1 never contributes
+    assert clock.t >= 5.0

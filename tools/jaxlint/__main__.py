@@ -1,25 +1,74 @@
 """CLI: ``python -m tools.jaxlint [paths...]``.
 
 Exit codes: 0 clean (or all findings suppressed/baselined), 1 findings,
-2 usage/parse errors. Must stay importable without jax installed (the CI
-lint job has no project deps).
+2 usage/parse errors, 3 a rule crashed (internal error — results are
+incomplete, which CI must distinguish from a real regression). Must stay
+importable without jax installed (the CI lint job has no project deps).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import os
 import sys
 
 from . import engine, rules
 
 DEFAULT_BASELINE = os.path.join(os.path.dirname(__file__), "baseline.txt")
+FIXTURES_DIR = os.path.join(os.path.dirname(__file__), "fixtures")
+
+
+def _fixture_paths(code: str, kind: str) -> list[str]:
+    """Files of one rule's fixture: ``JLxxx_<kind>.py``, or every .py under
+    a ``jlxxx_<kind>/`` directory for the path-based rules."""
+    flat = os.path.join(FIXTURES_DIR, f"{code}_{kind}.py")
+    if os.path.isfile(flat):
+        return [flat]
+    d = os.path.join(FIXTURES_DIR, f"{code.lower()}_{kind}")
+    out: list[str] = []
+    if os.path.isdir(d):
+        for dirpath, _, filenames in os.walk(d):
+            out.extend(
+                os.path.join(dirpath, f)
+                for f in sorted(filenames) if f.endswith(".py")
+            )
+    return out
+
+
+def _explain(code: str) -> int:
+    rule_cls = rules.RULES.get(code)
+    if rule_cls is None:
+        print(f"error: unknown rule {code!r} (see --list-rules)",
+              file=sys.stderr)
+        return 2
+    print(f"{code} [{engine.rule_family(code)}]  {rule_cls.summary}\n")
+    doc = inspect.cleandoc(rule_cls.__doc__ or "").strip()
+    if doc:
+        print(doc + "\n")
+    for kind, label in (("good", "passes"), ("bad", "is flagged")):
+        paths = _fixture_paths(code, kind)
+        if not paths:
+            continue
+        for p in paths:
+            rel = os.path.relpath(p, os.path.dirname(FIXTURES_DIR))
+            print(f"--- {kind} fixture ({label}): {rel} ---")
+            with open(p, encoding="utf-8") as f:
+                print(f.read().rstrip())
+            print()
+    return 0
+
+
+def _render_github(f: engine.Finding) -> str:
+    # GitHub workflow-command annotation: shows inline on the PR diff
+    return (f"::error file={f.path},line={f.line},col={f.col + 1},"
+            f"title=jaxlint {f.rule}::{f.message}")
 
 
 def main(argv: list[str] | None = None) -> int:
     parser = argparse.ArgumentParser(
         prog="python -m tools.jaxlint",
-        description="AST-based JAX contract checker (rules JL001-JL007; "
-        "see DESIGN.md §9)",
+        description="AST-based contract checker: jit family JL001-JL007 "
+        "(DESIGN.md §9) + concurrency family JL101-JL106 (DESIGN.md §11)",
     )
     parser.add_argument("paths", nargs="*", default=["src"],
                         help="files or directories to lint (default: src)")
@@ -27,6 +76,9 @@ def main(argv: list[str] | None = None) -> int:
                         help="repo root paths are resolved against")
     parser.add_argument("--select", action="append", default=None,
                         metavar="JLxxx", help="run only these rules")
+    parser.add_argument("--family", choices=("jit", "concurrency", "all"),
+                        default="all",
+                        help="run only one rule family (default: all)")
     parser.add_argument("--baseline", default=DEFAULT_BASELINE,
                         help="baseline file of accepted findings")
     parser.add_argument("--write-baseline", action="store_true",
@@ -35,24 +87,39 @@ def main(argv: list[str] | None = None) -> int:
                         "disables with reasons)")
     parser.add_argument("--list-rules", action="store_true",
                         help="print the rule registry and exit")
+    parser.add_argument("--explain", metavar="JLxxx", default=None,
+                        help="print a rule's contract plus its good/bad "
+                        "fixtures and exit")
+    parser.add_argument("--format", choices=("text", "github"),
+                        default="text",
+                        help="finding output format (github = workflow-"
+                        "command annotations shown inline on PRs)")
     parser.add_argument("-q", "--quiet", action="store_true",
                         help="suppress the summary line")
     args = parser.parse_args(argv)
 
     if args.list_rules:
         for code, rule_cls in sorted(rules.RULES.items()):
-            print(f"{code}  {rule_cls.summary}")
+            fam = engine.rule_family(code)
+            print(f"{code}  [{fam:<11}]  {rule_cls.summary}")
         return 0
+    if args.explain:
+        return _explain(args.explain)
 
     baseline = engine.load_baseline(args.baseline)
     result = engine.lint(
         args.paths, root=args.root, select=args.select,
         baseline=None if args.write_baseline else baseline,
+        family=args.family,
     )
     for err in result.errors:
         print(f"error: {err}", file=sys.stderr)
     if result.errors:
         return 2
+    for err in result.internal_errors:
+        print(f"internal error: {err}", file=sys.stderr)
+    if result.internal_errors:
+        return 3
 
     if args.write_baseline:
         engine.write_baseline(args.baseline, result.findings)
@@ -61,10 +128,11 @@ def main(argv: list[str] | None = None) -> int:
         return 0
 
     for f in result.findings:
-        print(f.render())
+        print(_render_github(f) if args.format == "github" else f.render())
     if not args.quiet:
         parts = [f"{len(result.findings)} finding(s)",
-                 f"{result.n_files} file(s)"]
+                 f"{result.n_files} file(s)",
+                 f"family={args.family}"]
         if result.suppressed:
             parts.append(f"{len(result.suppressed)} suppressed inline")
         if result.baselined:

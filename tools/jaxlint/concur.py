@@ -1,0 +1,717 @@
+"""jaxlint rules JL101–JL106: the concurrency/protocol family.
+
+Static half of the two-family analyzer (DESIGN.md §11). Same machinery as
+the jit family — stdlib-AST passes over the :class:`engine.Project`,
+parameterized by config.py — but aimed at the host-side thread and
+exchange-protocol contracts: lock discipline, atomic publish, thread
+lifecycle, no-blocking-while-locked, injectable time, and callback-thread
+write confinement. The runtime half is :mod:`tools.jaxlint.interleave`.
+
+The shared substrate is :class:`ClassScan`: a per-class inventory of lock
+attributes, every ``self.X`` access (read/write, lexically lock-guarded or
+not), and the call graph reachable from ``threading.Thread`` targets.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Optional
+
+from . import config
+from .callgraph import FuncNode, dotted_name, terminal_name
+from .engine import Finding, Module, Project
+from .rules import _finding, qualify
+
+# ---------------------------------------------------------------------------
+# per-class concurrency inventory
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Access:
+    """One ``self.X`` touch: where, which method, read-or-write, guarded."""
+
+    attr: str
+    node: ast.AST          # anchor for the finding (the Attribute node)
+    method: str            # top-level method name the access lives in
+    func: FuncNode         # innermost enclosing function (method or nested)
+    write: bool
+    guarded: bool          # lexically inside ``with self.<lock>:``
+
+
+@dataclasses.dataclass
+class ClassScan:
+    module: Module
+    node: ast.ClassDef
+    self_name: str
+    lock_attrs: set[str]
+    primitive_attrs: set[str]           # incl. locks: thread-safe by nature
+    init_writes: set[str]
+    writes_outside_init: set[str]
+    accesses: list[Access]
+    methods: dict[str, ast.FunctionDef]
+    #: thread targets: method names (``target=self._run``) and nested
+    #: function defs (``target=_loop`` closed over self)
+    thread_target_methods: set[str]
+    thread_target_funcs: list[FuncNode]
+
+    def guarded_write_attrs(self) -> set[str]:
+        return {a.attr for a in self.accesses if a.write and a.guarded}
+
+    def thread_graph_attrs(self) -> set[str]:
+        """Attrs touched in the call graph rooted at the thread targets,
+        following ``self.m()`` calls within the class (fixpoint)."""
+        reach: set[str] = set()
+        queue = list(self.thread_target_methods)
+        for fn in self.thread_target_funcs:
+            queue.extend(self._self_calls(fn))
+        while queue:
+            m = queue.pop()
+            if m in reach or m not in self.methods:
+                continue
+            reach.add(m)
+            queue.extend(self._self_calls(self.methods[m]))
+        funcs = {id(fn) for fn in self.thread_target_funcs}
+        return {
+            a.attr for a in self.accesses
+            if a.method in reach or id(a.func) in funcs
+        }
+
+    def _self_calls(self, fn: FuncNode) -> set[str]:
+        out: set[str] = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == self.self_name):
+                out.add(node.func.attr)
+        return out
+
+
+def _is_primitive_ctor(value: ast.expr, module_scope) -> tuple[bool, bool]:
+    """(is a threading sync primitive, is a lock) for an assigned value."""
+    if not isinstance(value, ast.Call):
+        return False, False
+    t = terminal_name(value.func)
+    if t not in config.SYNC_PRIMITIVE_CTOR_NAMES:
+        return False, False
+    d = dotted_name(value.func)
+    if d and module_scope is not None:
+        q = qualify(d, module_scope)
+        if "." in q and not q.startswith("threading."):
+            return False, False
+    return True, t in config.LOCK_CTOR_NAMES
+
+
+def _self_attr(node: ast.expr, self_name: str) -> Optional[str]:
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == self_name):
+        return node.attr
+    return None
+
+
+def _lock_ctx_attrs(stmt: ast.With, self_name: str,
+                    lock_attrs: set[str]) -> bool:
+    for item in stmt.items:
+        attr = _self_attr(item.context_expr, self_name)
+        if attr is not None and attr in lock_attrs:
+            return True
+    return False
+
+
+def scan_class(module: Module, node: ast.ClassDef, scope) -> ClassScan:
+    methods = {
+        s.name: s for s in node.body
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    # pass 1: lock/primitive attributes (any method may create them)
+    lock_attrs: set[str] = set()
+    primitive_attrs: set[str] = set()
+    for fn in methods.values():
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Assign):
+                continue
+            prim, lock = _is_primitive_ctor(sub.value, scope)
+            if not prim:
+                continue
+            for t in sub.targets:
+                attr = _self_attr(t, "self")
+                if attr:
+                    primitive_attrs.add(attr)
+                    if lock:
+                        lock_attrs.add(attr)
+
+    scan = ClassScan(
+        module=module, node=node, self_name="self",
+        lock_attrs=lock_attrs, primitive_attrs=primitive_attrs,
+        init_writes=set(), writes_outside_init=set(), accesses=[],
+        methods=methods, thread_target_methods=set(),
+        thread_target_funcs=[],
+    )
+
+    # pass 2: accesses, guardedness, thread targets
+    for mname, fn in methods.items():
+        self_name = "self"
+        if fn.args.args:
+            self_name = fn.args.args[0].arg
+        _walk_accesses(scan, fn, fn, mname, self_name, guarded=False)
+    return scan
+
+
+def _record(scan: ClassScan, attr: str, node: ast.AST, method: str,
+            func: FuncNode, write: bool, guarded: bool) -> None:
+    scan.accesses.append(Access(
+        attr=attr, node=node, method=method, func=func,
+        write=write, guarded=guarded,
+    ))
+    if write:
+        if method == "__init__":
+            scan.init_writes.add(attr)
+        else:
+            scan.writes_outside_init.add(attr)
+
+
+def _walk_accesses(scan: ClassScan, fn: FuncNode, stmt_owner: FuncNode,
+                   method: str, self_name: str, guarded: bool) -> None:
+    """Recursive statement walk tracking lexical with-lock containment.
+
+    Nested defs/lambdas are walked too (their accesses belong to the same
+    class), but the guard flag resets — a closure *defined* inside a
+    ``with`` block runs later, outside it.
+    """
+
+    def visit(node: ast.AST, owner: FuncNode, guarded: bool) -> None:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.Lambda)):
+                visit(child, child, False)
+                continue
+            if isinstance(child, ast.With):
+                inner = guarded or _lock_ctx_attrs(
+                    child, self_name, scan.lock_attrs
+                )
+                for item in child.items:
+                    visit(item, owner, guarded)
+                for stmt in child.body:
+                    visit(stmt, owner, inner)
+                continue
+            _classify(child, owner, guarded)
+            visit(child, owner, guarded)
+
+    def _classify(node: ast.AST, owner: FuncNode, guarded: bool) -> None:
+        # writes: plain/aug/ann assignments to self.X, subscript stores
+        # through self.X, and mutator method calls on self.X
+        if isinstance(node, ast.Attribute):
+            attr = _self_attr(node, self_name)
+            if attr is None:
+                return
+            if isinstance(node.ctx, (ast.Store, ast.Del)):
+                _record(scan, attr, node, method, owner, True, guarded)
+            elif isinstance(node.ctx, ast.Load):
+                _record(scan, attr, node, method, owner, False, guarded)
+            return
+        if isinstance(node, ast.Subscript) and isinstance(
+                node.ctx, (ast.Store, ast.Del)):
+            attr = _self_attr(node.value, self_name)
+            if attr is not None:
+                # count the container itself as written (the Load on
+                # node.value is recorded separately by the Attribute case)
+                _record(scan, attr, node, method, owner, True, guarded)
+            return
+        if isinstance(node, ast.Call):
+            if isinstance(node.func, ast.Attribute):
+                attr = _self_attr(node.func.value, self_name)
+                if attr is not None and node.func.attr in _MUTATOR_METHODS:
+                    _record(scan, attr, node, method, owner, True, guarded)
+            # thread targets: threading.Thread(target=...)
+            if terminal_name(node.func) == "Thread":
+                for kw in node.keywords:
+                    if kw.arg != "target":
+                        continue
+                    tattr = _self_attr(kw.value, self_name)
+                    if tattr is not None:
+                        scan.thread_target_methods.add(tattr)
+                    elif isinstance(kw.value, ast.Name):
+                        local = _find_local_def(fn, kw.value.id)
+                        if local is not None:
+                            scan.thread_target_funcs.append(local)
+
+    visit(fn, stmt_owner, guarded)
+
+
+#: container-mutating method names counted as writes of the receiver attr
+_MUTATOR_METHODS = frozenset(
+    {"append", "add", "update", "pop", "popleft", "setdefault", "remove",
+     "discard", "clear", "extend", "insert"}
+)
+
+
+def _find_local_def(fn: FuncNode, name: str) -> Optional[ast.FunctionDef]:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.FunctionDef) and node.name == name:
+            return node
+    return None
+
+
+def iter_class_scans(project: Project):
+    graph = project.callgraph
+    for module in project.modules:
+        scope = graph.scopes.get(module.name)
+        for node in ast.walk(module.tree):
+            if isinstance(node, ast.ClassDef):
+                yield module, scan_class(module, node, scope)
+
+
+# ---------------------------------------------------------------------------
+# JL101 — lock discipline
+# ---------------------------------------------------------------------------
+
+
+class LockDiscipline:
+    """An attribute is *protected* once it is ever written under ``with
+    self._lock:`` or touched in a ``threading.Thread`` target's call graph
+    (and written outside ``__init__``); every other access site must then
+    hold the lock too. A half-guarded attribute is worse than an unguarded
+    one — the lock documents an intent the unguarded sites silently break.
+    ``__init__`` accesses (no thread exists yet), threading primitives,
+    and attrs only ever written in ``__init__`` (immutable config) are
+    exempt."""
+
+    code = "JL101"
+    summary = "attr shared with a thread/lock is accessed without the lock"
+    family = "concurrency"
+
+    def run(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        for module, scan in iter_class_scans(project):
+            protected = set(scan.guarded_write_attrs())
+            if scan.thread_target_methods or scan.thread_target_funcs:
+                protected |= (
+                    scan.thread_graph_attrs() & scan.writes_outside_init
+                )
+            protected -= scan.primitive_attrs
+            if not protected:
+                continue
+            for a in scan.accesses:
+                if (a.attr in protected and not a.guarded
+                        and a.method != "__init__"):
+                    kind = "written" if a.write else "read"
+                    findings.append(_finding(
+                        module, a.node, self.code,
+                        f"{scan.node.name}.{a.attr} is lock-protected "
+                        f"(guarded writes or thread-shared) but {kind} "
+                        f"without the lock in {a.method}()",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL102 — atomic-publish discipline
+# ---------------------------------------------------------------------------
+
+
+def _is_write_mode(call: ast.Call) -> bool:
+    mode = None
+    if len(call.args) >= 2 and isinstance(call.args[1], ast.Constant):
+        mode = call.args[1].value
+    for kw in call.keywords:
+        if kw.arg == "mode" and isinstance(kw.value, ast.Constant):
+            mode = kw.value.value
+    return isinstance(mode, str) and any(c in mode for c in "wxa")
+
+
+def _path_is_staged(expr: ast.expr) -> bool:
+    for node in ast.walk(expr):
+        ident = None
+        if isinstance(node, ast.Name):
+            ident = node.id
+        elif isinstance(node, ast.Attribute):
+            ident = node.attr
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            ident = node.value
+        elif isinstance(node, ast.Call):
+            t = terminal_name(node.func)
+            if t in ("mkdtemp", "mkstemp", "NamedTemporaryFile"):
+                return True
+        if ident and any(
+            m in ident.lower() for m in config.TMP_PATH_MARKERS
+        ):
+            return True
+    return False
+
+
+def _functions_of(module: Module):
+    """(function node, enclosing name) for every def, plus the module."""
+    for node in ast.walk(module.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+class AtomicPublish:
+    """In the publish-path modules (leases, exchange files, checkpoints —
+    config.PUBLISH_MODULE_SUFFIXES), a write-mode ``open()`` must target a
+    tmp-staged sibling, and the staging function must ``os.replace``/
+    ``os.rename`` it into place. A bare ``open(final_path, "w")`` means a
+    concurrent reader can observe a torn file."""
+
+    code = "JL102"
+    summary = "publish-path write is not tmp-staged + os.replace'd"
+    family = "concurrency"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph = project.callgraph
+        findings: list[Finding] = []
+        for module in project.modules:
+            if not module.rel.endswith(config.PUBLISH_MODULE_SUFFIXES):
+                continue
+            scope = graph.scopes.get(module.name)
+            for fn in _functions_of(module):
+                findings.extend(self._check_function(module, fn, scope))
+        return findings
+
+    def _check_function(self, module, fn, scope) -> list[Finding]:
+        has_rename = False
+        opens: list[ast.Call] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = dotted_name(node.func)
+            qual = qualify(d, scope) if d and scope else d
+            if qual in config.PUBLISH_RENAME_QUALNAMES:
+                has_rename = True
+            if (isinstance(node.func, ast.Name) and node.func.id == "open"
+                    and node.args and _is_write_mode(node)):
+                opens.append(node)
+        findings = []
+        for node in opens:
+            if not _path_is_staged(node.args[0]):
+                findings.append(_finding(
+                    module, node, self.code,
+                    "write-mode open() on a publish path writes in place; "
+                    "stage to a tmp sibling and os.replace() it "
+                    "(readers must never see a torn file)",
+                ))
+            elif not has_rename:
+                findings.append(_finding(
+                    module, node, self.code,
+                    "staged tmp file is never published: no os.replace/"
+                    "os.rename in this function",
+                ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL103 — thread lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _enclosing_class(module: Module, node: ast.AST) -> Optional[ast.ClassDef]:
+    for cls in ast.walk(module.tree):
+        if isinstance(cls, ast.ClassDef):
+            for sub in ast.walk(cls):
+                if sub is node:
+                    return cls
+    return None
+
+
+def _joined_names(scope_node: ast.AST) -> set[str]:
+    """Receiver dotted names of zero-positional-arg ``.join()`` calls."""
+    out: set[str] = set()
+    for node in ast.walk(scope_node):
+        if (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "join" and not node.args):
+            d = dotted_name(node.func.value)
+            if d:
+                out.add(d)
+    return out
+
+
+class ThreadLifecycle:
+    """Every ``threading.Thread`` must pick its daemon-ness explicitly
+    (``daemon=`` kwarg — an implicit non-daemon thread can hang process
+    exit; an accidental daemon can be killed mid-write), and a thread
+    stored on ``self`` must be joined somewhere in its owning class (a
+    local thread, in its creating function)."""
+
+    code = "JL103"
+    summary = "threading.Thread without explicit daemon= or never joined"
+    family = "concurrency"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph = project.callgraph
+        findings: list[Finding] = []
+        for module in project.modules:
+            scope = graph.scopes.get(module.name)
+            for fn in _functions_of(module):
+                findings.extend(self._check_function(module, fn, scope))
+        return findings
+
+    def _is_thread_ctor(self, node: ast.Call, scope) -> bool:
+        d = dotted_name(node.func)
+        if not d:
+            return False
+        qual = qualify(d, scope) if scope else d
+        return qual == "threading.Thread" or (
+            terminal_name(node.func) == "Thread"
+            and qual.startswith("threading")
+        )
+
+    def _check_function(self, module, fn, scope) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Assign):
+                continue
+            call = node.value
+            if not (isinstance(call, ast.Call)
+                    and self._is_thread_ctor(call, scope)):
+                continue
+            if not any(kw.arg == "daemon" for kw in call.keywords):
+                findings.append(_finding(
+                    module, call, self.code,
+                    "threading.Thread without explicit daemon=: decide "
+                    "whether process exit may orphan or kill this thread",
+                ))
+            for target in node.targets:
+                d = dotted_name(target)
+                if d is None:
+                    continue
+                if d.startswith("self."):
+                    cls = _enclosing_class(module, node)
+                    joined = _joined_names(cls) if cls is not None else set()
+                else:
+                    joined = _joined_names(fn)
+                if d not in joined:
+                    where = ("its owning class" if d.startswith("self.")
+                             else "its creating function")
+                    findings.append(_finding(
+                        module, call, self.code,
+                        f"thread `{d}` is never joined in {where}; the "
+                        "owner's stop/close path must join it",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL104 — no blocking while locked
+# ---------------------------------------------------------------------------
+
+
+def _blocking_call_reason(node: ast.Call, scope) -> Optional[str]:
+    d = dotted_name(node.func)
+    qual = qualify(d, scope) if d and scope else d
+    if qual in config.BLOCKING_CALL_QUALNAMES:
+        return f"{qual}() blocks"
+    if isinstance(node.func, ast.Name) and node.func.id == "open":
+        return "file I/O blocks"
+    if isinstance(node.func, ast.Attribute):
+        # x.join() with zero positional args is a thread join (str.join
+        # always takes exactly one); .wait()/.acquire() block outright
+        if node.func.attr == "join" and not node.args:
+            return ".join() blocks on another thread"
+        if node.func.attr in ("wait", "acquire"):
+            return f".{node.func.attr}() blocks"
+    return None
+
+
+class NoBlockingWhileLocked:
+    """Inside a ``with self._lock:`` region nothing may sleep, join, wait,
+    or do file I/O — a blocked lock-holder stalls every thread that needs
+    the lock (the heartbeat renew thread starving liveness is the failure
+    mode this guards). Checks the lexical with-body plus one level of
+    same-module/same-class calls made from it."""
+
+    code = "JL104"
+    summary = "blocking call (sleep/join/wait/IO) while holding a lock"
+    family = "concurrency"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph = project.callgraph
+        findings: list[Finding] = []
+        for module, scan in iter_class_scans(project):
+            if not scan.lock_attrs:
+                continue
+            scope = graph.scopes.get(module.name)
+            for fn in scan.methods.values():
+                for stmt in ast.walk(fn):
+                    if not isinstance(stmt, ast.With):
+                        continue
+                    if not _lock_ctx_attrs(stmt, "self", scan.lock_attrs):
+                        continue
+                    findings.extend(self._check_locked_body(
+                        module, scan, scope, stmt
+                    ))
+        return findings
+
+    def _iter_locked_nodes(self, stmt: ast.With):
+        todo: list[ast.AST] = list(stmt.body)
+        while todo:
+            node = todo.pop()
+            yield node
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue  # closures run later, outside the lock
+            todo.extend(ast.iter_child_nodes(node))
+
+    def _check_locked_body(self, module, scan, scope, stmt) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in self._iter_locked_nodes(stmt):
+            if not isinstance(node, ast.Call):
+                continue
+            reason = _blocking_call_reason(node, scope)
+            if reason is not None:
+                findings.append(_finding(
+                    module, node, self.code,
+                    f"{reason} while `self.{sorted(scan.lock_attrs)[0]}` "
+                    "is held; move it outside the critical section",
+                ))
+                continue
+            callee = self._resolve_one_level(node, scan, scope)
+            if callee is None:
+                continue
+            for sub in ast.walk(callee):
+                if isinstance(sub, ast.Call):
+                    sub_reason = _blocking_call_reason(sub, scope)
+                    if sub_reason is not None:
+                        findings.append(_finding(
+                            module, node, self.code,
+                            f"call into `{callee.name}()` {sub_reason} "
+                            "(line "
+                            f"{getattr(sub, 'lineno', '?')}) while the "
+                            "lock is held",
+                        ))
+                        break
+        return findings
+
+    def _resolve_one_level(self, node, scan, scope) -> Optional[FuncNode]:
+        if (isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"):
+            return scan.methods.get(node.func.attr)
+        if isinstance(node.func, ast.Name) and scope is not None:
+            info = scope.defs.get(node.func.id)
+            if info is not None:
+                return info.node
+        return None
+
+
+# ---------------------------------------------------------------------------
+# JL105 — injectable time
+# ---------------------------------------------------------------------------
+
+
+class InjectableTime:
+    """In liveness/exchange/timing modules, a bare ``time.time()`` /
+    ``monotonic()`` / ``perf_counter()`` / ``sleep()`` hard-wires the wall
+    clock into logic that the fake-clock test suites must drive
+    deterministically. Hold the callable on an injectable attribute
+    (``self._clock = time.monotonic`` — a reference, not a call) and call
+    that instead."""
+
+    code = "JL105"
+    summary = "bare wall-clock call in liveness/timing code"
+    family = "concurrency"
+
+    def run(self, project: Project) -> list[Finding]:
+        graph = project.callgraph
+        findings: list[Finding] = []
+        for module in project.modules:
+            if not module.rel.endswith(config.CLOCKED_MODULE_SUFFIXES):
+                continue
+            scope = graph.scopes.get(module.name)
+            for node in ast.walk(module.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                d = dotted_name(node.func)
+                qual = qualify(d, scope) if d and scope else d
+                if qual in config.TIME_CALL_QUALNAMES:
+                    findings.append(_finding(
+                        module, node, self.code,
+                        f"bare {qual}() in a liveness/timing module; use "
+                        "an injectable clock/sleep attribute so tests "
+                        "control time",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# JL106 — callback-thread writes
+# ---------------------------------------------------------------------------
+
+
+def _callback_target_names(project: Project) -> set[str]:
+    """Terminal method names registered as jax host callbacks anywhere in
+    the project — through a direct reference or a wrapping lambda."""
+    graph = project.callgraph
+    names: set[str] = set()
+    for module in project.modules:
+        scope = graph.scopes.get(module.name)
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            d = dotted_name(node.func)
+            qual = qualify(d, scope) if d and scope else d
+            if qual not in config.CALLBACK_QUALNAMES:
+                continue
+            target = node.args[0]
+            if isinstance(target, ast.Lambda):
+                for sub in ast.walk(target.body):
+                    if isinstance(sub, ast.Call):
+                        t = terminal_name(sub.func)
+                        if t:
+                            names.add(t)
+            else:
+                t = terminal_name(target)
+                if t:
+                    names.add(t)
+    return names
+
+
+class CallbackThreadWrites:
+    """Methods invoked from ``jax.debug.callback`` run on the runtime's
+    callback threads, concurrently with the host loop. Any ``self`` state
+    they mutate must be lock-guarded (or the class inline-disables with a
+    single-writer justification) — the ShardWindowTimer marker dicts are
+    the exemplar surface (DESIGN.md §8)."""
+
+    code = "JL106"
+    summary = "callback-thread method mutates state outside a lock"
+    family = "concurrency"
+
+    def run(self, project: Project) -> list[Finding]:
+        targets = _callback_target_names(project)
+        if not targets:
+            return []
+        findings: list[Finding] = []
+        for module, scan in iter_class_scans(project):
+            hit_methods = targets & set(scan.methods)
+            if not hit_methods:
+                continue
+            for a in scan.accesses:
+                if (a.method in hit_methods and a.write and not a.guarded
+                        and a.attr not in scan.primitive_attrs):
+                    findings.append(_finding(
+                        module, a.node, self.code,
+                        f"{scan.node.name}.{a.method}() runs on a jax "
+                        f"callback thread but writes self.{a.attr} "
+                        "without a lock",
+                    ))
+        return findings
+
+
+# ---------------------------------------------------------------------------
+# registry (merged into rules.RULES by rules.py)
+# ---------------------------------------------------------------------------
+
+RULES: dict[str, type] = {
+    r.code: r
+    for r in (
+        LockDiscipline,
+        AtomicPublish,
+        ThreadLifecycle,
+        NoBlockingWhileLocked,
+        InjectableTime,
+        CallbackThreadWrites,
+    )
+}

@@ -113,3 +113,66 @@ PAYLOAD_TREE_VAR = "tree"
 PAYLOAD_META_VAR = "metadata"
 RESTORE_LIKE_VAR = "like"
 RESTORE_TREE_VARS: tuple[str, ...] = ("tree",)
+
+# ---------------------------------------------------------------------------
+# JL101–JL106 — concurrency/protocol family (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+#: ``threading`` constructors that create a mutual-exclusion lock; a
+#: ``self.X = threading.Lock()`` attribute defines a class's guarded regions
+#: (``with self.X:``) for JL101/JL104/JL106.
+LOCK_CTOR_NAMES: frozenset[str] = frozenset({"Lock", "RLock"})
+
+#: All ``threading`` synchronization-primitive constructors. Attributes
+#: holding these are themselves thread-safe and exempt from JL101's
+#: guarded-access requirement (an Event IS the synchronization).
+SYNC_PRIMITIVE_CTOR_NAMES: frozenset[str] = frozenset(
+    {"Lock", "RLock", "Event", "Condition", "Semaphore",
+     "BoundedSemaphore", "Barrier"}
+)
+
+#: Modules (path suffixes, POSIX separators) whose on-disk writes are
+#: *publishes* read concurrently by other threads/processes: heartbeat
+#: leases, exchange files, checkpoints. JL102 requires every write-mode
+#: ``open()`` here to stage through a tmp sibling + ``os.replace``.
+PUBLISH_MODULE_SUFFIXES: tuple[str, ...] = (
+    "core/fleet.py",
+    "checkpoint/store.py",
+    "launch/multihost.py",
+)
+
+#: A path expression counts as staged (not a direct publish) when it
+#: mentions an identifier containing one of these markers, or a tempfile
+#: call (``tempfile.mkdtemp`` / ``mkstemp`` / ``NamedTemporaryFile``).
+TMP_PATH_MARKERS: tuple[str, ...] = ("tmp",)
+
+#: The atomic-rename entry points that turn a staged file into a publish.
+PUBLISH_RENAME_QUALNAMES: frozenset[str] = frozenset(
+    {"os.replace", "os.rename"}
+)
+
+#: Calls that block (or do I/O) and therefore must not run while a lock is
+#: held (JL104). ``open()`` and zero-positional-arg ``.join()``/``.wait()``
+#: method calls are matched structurally in the rule, not listed here.
+BLOCKING_CALL_QUALNAMES: frozenset[str] = frozenset(
+    {"time.sleep", "os.replace", "os.rename", "os.fsync",
+     "subprocess.run", "subprocess.check_call", "subprocess.check_output",
+     "shutil.rmtree", "shutil.copytree", "shutil.copy"}
+)
+
+#: Modules (path suffixes) implementing liveness/exchange timing, where
+#: every clock read and sleep must go through an injectable attribute so
+#: tests drive time deterministically (JL105). Wall-clock *measurement*
+#: (benchmarks, logging) is deliberately out of scope.
+CLOCKED_MODULE_SUFFIXES: tuple[str, ...] = (
+    "core/fleet.py",
+    "core/heterogeneity.py",
+    "launch/multihost.py",
+)
+
+#: The bare time calls JL105 flags inside the clocked modules. References
+#: (``clock=time.monotonic`` defaults) are fine — only *calls* hard-wire
+#: the wall clock.
+TIME_CALL_QUALNAMES: frozenset[str] = frozenset(
+    {"time.time", "time.monotonic", "time.perf_counter", "time.sleep"}
+)

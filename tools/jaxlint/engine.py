@@ -238,6 +238,20 @@ class LintResult:
     baselined: list[Finding]           # silenced by the baseline file
     errors: list[str]                  # parse failures (always fatal)
     n_files: int = 0
+    #: a rule that *crashed* (vs. one that found something): CI must tell
+    #: a regression from a broken linter — distinct exit code 3
+    internal_errors: list[str] = dataclasses.field(default_factory=list)
+
+
+FAMILIES = ("jit", "concurrency")
+
+
+def rule_family(code: str) -> str:
+    """JL0xx = jit-contract family, JL1xx = concurrency/protocol family."""
+    try:
+        return "concurrency" if int(code[2:]) >= 100 else "jit"
+    except ValueError:
+        return "jit"
 
 
 def lint(
@@ -245,18 +259,27 @@ def lint(
     root: str,
     select: Optional[Iterable[str]] = None,
     baseline: Optional[set[str]] = None,
+    family: Optional[str] = None,
 ) -> LintResult:
     """Run every (selected) rule over ``paths``; returns the partitioned
-    findings. ``baseline`` is a pre-loaded entry set (see load_baseline)."""
+    findings. ``baseline`` is a pre-loaded entry set (see load_baseline);
+    ``family`` restricts to one rule family ("jit"/"concurrency";
+    None/"all" runs both)."""
     from . import rules
 
     project = load_project(paths, root)
     wanted = set(select) if select else None
     findings: list[Finding] = []
+    internal: list[str] = []
     for code, rule_cls in sorted(rules.RULES.items()):
         if wanted is not None and code not in wanted:
             continue
-        findings.extend(rule_cls().run(project))
+        if family and family != "all" and rule_family(code) != family:
+            continue
+        try:
+            findings.extend(rule_cls().run(project))
+        except Exception as e:  # noqa: BLE001 — a broken rule is exit 3
+            internal.append(f"{code}: rule crashed: {e!r}")
     # attach source fingerprints (rules only know positions)
     with_code: list[Finding] = []
     for f in findings:
@@ -275,4 +298,5 @@ def lint(
         baselined=known,
         errors=project.errors,
         n_files=len(project.modules),
+        internal_errors=internal,
     )

@@ -1,0 +1,33 @@
+"""JL101 bad: half-guarded attrs — 3 findings.
+
+`_count` is written under the lock but read bare; `_status` is shared
+with the renew thread but written bare on both sides.
+"""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+        self._status = "idle"
+        self._thread = None
+
+    def incr(self):
+        with self._lock:
+            self._count += 1
+
+    def snapshot(self):
+        return self._count  # JL101: unguarded read of a guarded-write attr
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        self._status = "running"  # JL101: thread-side write, no lock
+
+    def stop(self):
+        self._status = "stopped"  # JL101: host-side write, no lock
+        if self._thread is not None:
+            self._thread.join()

@@ -1,0 +1,32 @@
+"""JL101 good: every access to a protected attr holds the lock."""
+import threading
+
+
+class Worker:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._count = 0
+        self._status = "idle"
+        self._thread = None
+
+    def incr(self):
+        with self._lock:
+            self._count += 1
+
+    def snapshot(self):
+        with self._lock:
+            return self._count
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self):
+        with self._lock:
+            self._status = "running"
+
+    def stop(self):
+        with self._lock:
+            self._status = "stopped"
+        if self._thread is not None:
+            self._thread.join()

@@ -1,0 +1,15 @@
+"""JL103 bad — 2 findings on one constructor: implicit daemon-ness and
+a self-stored thread no method of the class ever joins."""
+import threading
+
+
+class Runner:
+    def __init__(self):
+        self._thread = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run)
+        self._thread.start()
+
+    def _run(self):
+        pass

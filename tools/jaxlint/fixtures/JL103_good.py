@@ -1,0 +1,19 @@
+"""JL103 good: explicit daemon=, and the stop path joins the thread."""
+import threading
+
+
+class Runner:
+    def __init__(self):
+        self._thread = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _run(self):
+        pass

@@ -1,0 +1,32 @@
+"""JL104 bad — 4 findings: sleep, file I/O, and a thread join inside the
+critical section, plus one blocking call reached through a one-level
+helper call."""
+import threading
+import time
+
+
+def _flush(path):
+    with open(path, "w") as f:
+        f.write("x")
+
+
+class Publisher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._thread = None
+        self._n = 0
+
+    def tick(self):
+        with self._lock:
+            self._n += 1
+            time.sleep(0.1)  # JL104: sleeping with the lock held
+            log = open("log.txt", "w")  # JL104: file I/O with the lock held
+            log.close()
+
+    def shutdown(self):
+        with self._lock:
+            self._thread.join()  # JL104: joining a thread with the lock held
+
+    def publish(self, path):
+        with self._lock:
+            _flush(path)  # JL104: helper does file I/O with the lock held

@@ -1,0 +1,21 @@
+"""JL104 good: the critical section only touches memory; sleeps and I/O
+happen outside it."""
+import threading
+import time
+
+
+class Publisher:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._n = 0
+
+    def tick(self):
+        with self._lock:
+            self._n += 1
+        time.sleep(0.1)
+
+    def snapshot(self, path):
+        with self._lock:
+            n = self._n
+        with open(path, "w") as f:
+            f.write(str(n))

@@ -1,0 +1,20 @@
+"""JL106 bad — 2 findings: methods registered as jax host callbacks
+mutate marker dicts without a lock (they run on runtime callback
+threads, concurrently with the host loop)."""
+import jax
+
+
+class WindowTimer:
+    def __init__(self):
+        self._t0 = {}
+        self._t1 = {}
+
+    def mark_start(self, shard):
+        self._t0[int(shard)] = 0.0  # JL106: callback-thread write, no lock
+
+    def mark_end(self, shard):
+        self._t1[int(shard)] = 1.0  # JL106: callback-thread write, no lock
+
+    def attach(self, x):
+        jax.debug.callback(self.mark_start, x)
+        jax.debug.callback(self.mark_end, x)

@@ -1,0 +1,15 @@
+"""JL102 bad (path-scoped: lives under a publish-module suffix) —
+2 findings: an in-place publish and a staged file that never lands."""
+import json
+import os
+
+
+def publish_lease(path, payload):
+    with open(path, "w") as f:  # JL102: writes the final path in place
+        json.dump(payload, f)
+
+
+def publish_manifest(directory, payload):
+    tmp = os.path.join(directory, "manifest.tmp")
+    with open(tmp, "w") as f:  # JL102: staged but never os.replace'd
+        json.dump(payload, f)

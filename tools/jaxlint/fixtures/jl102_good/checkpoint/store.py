@@ -1,0 +1,10 @@
+"""JL102 good: stage to a tmp sibling, publish with one os.replace."""
+import json
+import os
+
+
+def publish_lease(path, payload):
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f)
+    os.replace(tmp, path)

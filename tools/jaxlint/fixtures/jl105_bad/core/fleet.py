@@ -1,0 +1,11 @@
+"""JL105 bad (path-scoped: lives under a liveness-module suffix) —
+2 findings: bare wall-clock reads the fake-clock tests cannot drive."""
+import time
+
+
+def lease_age(published_at):
+    return time.monotonic() - published_at  # JL105: bare wall clock
+
+
+def backoff(poll):
+    time.sleep(poll)  # JL105: bare sleep

@@ -1,0 +1,15 @@
+"""JL105 good: the clock and sleep are injectable attributes; holding
+``time.monotonic`` as a *reference* is fine — calling it bare is not."""
+import time
+
+
+class Liveness:
+    def __init__(self, clock=time.monotonic, sleep=time.sleep):
+        self._clock = clock
+        self._sleep = sleep
+
+    def lease_age(self, published_at):
+        return self._clock() - published_at
+
+    def backoff(self, poll):
+        self._sleep(poll)

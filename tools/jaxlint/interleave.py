@@ -1,0 +1,353 @@
+"""InterleaveSentinel: deterministic exploration of thread interleavings.
+
+Runtime half of the concurrency family (DESIGN.md §11), in the spirit of
+:class:`tools.jaxlint.sentinel.RetraceSentinel`: where the static rules
+prove lock *discipline*, this sentinel explores lock *schedules*. It is a
+cooperative scheduler over real ``threading`` threads — at any moment at
+most one managed thread runs; at every yield point it parks itself and a
+seeded RNG picks the next runnable thread. Same seed → same schedule →
+same outcome, so a race is a reproducible failing test instead of an OS
+scheduling coincidence.
+
+Yield points (all recorded in :attr:`InterleaveSentinel.schedule`):
+
+* every ``line`` event in modules matching the ``trace`` patterns
+  (installed per-thread via ``sys.settrace`` — line granularity, so a
+  check-then-act window of two source lines is a real interleaving point);
+* every operation on sentinel-provided primitives (:meth:`lock`,
+  :meth:`event`) — their blocking operations park the thread *cooperatively*
+  so the scheduler keeps control (replace a unit's ``threading.Lock`` with
+  ``sentinel.lock()`` before running);
+* explicit :meth:`yield_point` calls in test bodies.
+
+Cautions: a managed thread must not block on a *real* primitive while
+traced (the scheduler would time out — swap locks for sentinel locks), and
+a sentinel event's *timed* wait returns immediately (virtual time: the
+timeout is deemed elapsed) so renewal-style loops terminate.
+
+Stdlib-only and jax-free: importable from the lint job and from tier-1
+tests alike.
+"""
+from __future__ import annotations
+
+import os
+import random
+import sys
+import threading
+from typing import Any, Callable, Optional
+
+__all__ = [
+    "InterleaveError",
+    "InterleaveSentinel",
+    "SentinelEvent",
+    "SentinelLock",
+]
+
+
+class InterleaveError(AssertionError):
+    """Deadlock, schedule-budget exhaustion, or scheduler timeout."""
+
+
+class _Abort(BaseException):
+    """Internal: unwind managed threads after a scheduler abort (derives
+    from BaseException so user ``except Exception`` blocks can't eat it)."""
+
+
+class SentinelLock:
+    """Cooperative mutex: blocking acquire parks the thread in the
+    scheduler instead of the OS. State mutations are race-free because
+    only one managed thread ever runs at a time."""
+
+    def __init__(self, sentinel: "InterleaveSentinel", name: str):
+        self._s = sentinel
+        self.name = name
+        self._owner: Optional[str] = None
+
+    def acquire(self) -> bool:
+        self._s._op(("lock", self.name, "acquire"))
+        while self._owner is not None:
+            self._s._block(self)
+        self._owner = self._s._current_name()
+        return True
+
+    def release(self) -> None:
+        me = self._s._current_name()
+        if self._owner != me:
+            raise InterleaveError(
+                f"lock {self.name!r} released by {me!r} but held by "
+                f"{self._owner!r}"
+            )
+        self._owner = None
+        self._s._wake_waiters(self)
+        self._s._op(("lock", self.name, "release"))
+
+    def locked(self) -> bool:
+        return self._owner is not None
+
+    def __enter__(self) -> "SentinelLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+
+class SentinelEvent:
+    """Cooperative event. ``wait(timeout)`` with a timeout never parks:
+    sentinel time is virtual, so the timeout is deemed to have elapsed —
+    this is what lets ``Event.wait(interval)``-paced renewal loops make
+    progress under the scheduler."""
+
+    def __init__(self, sentinel: "InterleaveSentinel", name: str):
+        self._s = sentinel
+        self.name = name
+        self._flag = False
+
+    def is_set(self) -> bool:
+        return self._flag
+
+    def set(self) -> None:
+        self._flag = True
+        self._s._wake_waiters(self)
+        self._s._op(("event", self.name, "set"))
+
+    def clear(self) -> None:
+        self._flag = False
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        self._s._op(("event", self.name, "wait"))
+        if timeout is not None:
+            return self._flag
+        while not self._flag:
+            self._s._block(self)
+        return True
+
+
+class InterleaveSentinel:
+    """Seeded, deterministic scheduler for a set of spawned thread bodies.
+
+    Usage::
+
+        sent = InterleaveSentinel(seed=3, trace=("repro/core/fleet.py",))
+        unit._lock = sent.lock("unit")       # swap in cooperative lock
+        sent.spawn("announce", unit.announce, "leaving")
+        sent.spawn("daemon", unit.renew)
+        sent.run()                           # raises on deadlock/thread error
+        assert <post-state invariant>
+
+    ``run`` replays identically for a given (seed, bodies) pair; iterate
+    seeds to explore distinct interleavings. ``schedule`` records every
+    context switch as ``(thread, kind, detail...)`` tuples.
+    """
+
+    def __init__(self, seed: int = 0, trace: tuple[str, ...] = (),
+                 max_switches: int = 50_000):
+        self.seed = int(seed)
+        self.trace_patterns = tuple(
+            p.replace(os.sep, "/") for p in trace
+        )
+        self.max_switches = int(max_switches)
+        self.schedule: list[tuple] = []
+        self.results: dict[str, Any] = {}
+        self._rng = random.Random(self.seed)
+        self._cond = threading.Condition()
+        self._recs: dict[str, dict] = {}
+        self._order: list[str] = []
+        self._current: Optional[str] = None
+        self._abort: Optional[str] = None
+        self._ran = False
+
+    # -- test-facing API ----------------------------------------------------
+
+    def spawn(self, name: str, fn: Callable, *args, **kwargs) -> None:
+        """Register a thread body; all bodies start when :meth:`run` runs."""
+        if self._ran:
+            raise InterleaveError("spawn() after run(): make a new sentinel")
+        if name in self._recs:
+            raise InterleaveError(f"duplicate thread name {name!r}")
+        self._recs[name] = {
+            "fn": fn, "args": args, "kwargs": kwargs,
+            "state": "new", "blocker": None, "error": None,
+            "thread": None,
+        }
+        self._order.append(name)
+
+    def lock(self, name: str = "lock") -> SentinelLock:
+        return SentinelLock(self, name)
+
+    def event(self, name: str = "event") -> SentinelEvent:
+        return SentinelEvent(self, name)
+
+    def yield_point(self, label: str = "") -> None:
+        """Explicit switch point for hand-instrumented test bodies."""
+        self._op(("yield", str(label)))
+
+    def run(self, timeout: float = 30.0) -> dict[str, Any]:
+        """Drive all spawned bodies to completion under one seeded
+        schedule. Returns ``{name: result}``; re-raises the first (spawn
+        order) thread exception; raises :class:`InterleaveError` on
+        deadlock, budget exhaustion, or a thread stuck on a real
+        (non-sentinel) block."""
+        if self._ran:
+            raise InterleaveError("run() called twice: make a new sentinel")
+        self._ran = True
+        for name in self._order:
+            rec = self._recs[name]
+            t = threading.Thread(
+                target=self._main, args=(name,),
+                name=f"interleave-{name}", daemon=True,
+            )
+            t._sentinel_name = name
+            rec["thread"] = t
+            rec["state"] = "runnable"
+            t.start()
+        try:
+            self._schedule_loop(timeout)
+        except BaseException:
+            self._do_abort("aborted")
+            raise
+        for name in self._order:
+            err = self._recs[name]["error"]
+            if err is not None:
+                raise err
+        return dict(self.results)
+
+    # -- scheduler core -----------------------------------------------------
+
+    def _schedule_loop(self, timeout: float) -> None:
+        with self._cond:
+            while True:
+                states = {n: r["state"] for n, r in self._recs.items()}
+                if all(s == "done" for s in states.values()):
+                    return
+                runnable = [n for n in self._order
+                            if states[n] == "runnable"]
+                if not runnable:
+                    blocked = {
+                        n: getattr(self._recs[n]["blocker"], "name", "?")
+                        for n in self._order if states[n] == "blocked"
+                    }
+                    self._do_abort("deadlock", locked=True)
+                    raise InterleaveError(
+                        f"deadlock: every live thread is blocked {blocked} "
+                        f"(schedule so far: {len(self.schedule)} switches)"
+                    )
+                if len(self.schedule) > self.max_switches:
+                    self._do_abort("budget", locked=True)
+                    raise InterleaveError(
+                        f"schedule exceeded {self.max_switches} switches — "
+                        "runaway loop under the sentinel?"
+                    )
+                pick = (runnable[0] if len(runnable) == 1
+                        else runnable[self._rng.randrange(len(runnable))])
+                self._current = pick
+                self._cond.notify_all()
+                ok = self._cond.wait_for(
+                    lambda: self._current is None, timeout=timeout
+                )
+                if not ok:
+                    self._do_abort("timeout", locked=True)
+                    raise InterleaveError(
+                        f"thread {pick!r} did not yield within {timeout}s — "
+                        "is it blocked on a real (non-sentinel) primitive?"
+                    )
+
+    def _do_abort(self, why: str, locked: bool = False) -> None:
+        if locked:
+            self._abort = self._abort or why
+            self._cond.notify_all()
+        else:
+            with self._cond:
+                self._abort = self._abort or why
+                self._cond.notify_all()
+
+    def _main(self, name: str) -> None:
+        rec = self._recs[name]
+        try:
+            with self._cond:
+                self._cond.wait_for(
+                    lambda: self._current == name or self._abort is not None
+                )
+                if self._abort is not None:
+                    raise _Abort()
+            if self.trace_patterns:
+                sys.settrace(self._global_tracer)
+            try:
+                self.results[name] = rec["fn"](*rec["args"], **rec["kwargs"])
+            finally:
+                sys.settrace(None)
+        except _Abort:
+            pass
+        except BaseException as e:
+            rec["error"] = e
+        finally:
+            with self._cond:
+                rec["state"] = "done"
+                if self._current == name:
+                    self._current = None
+                self._cond.notify_all()
+
+    def _current_name(self) -> Optional[str]:
+        return getattr(threading.current_thread(), "_sentinel_name", None)
+
+    def _op(self, label: tuple) -> None:
+        """Yield the turn back to the scheduler and wait to be re-picked."""
+        name = self._current_name()
+        if name is None:
+            return  # unmanaged thread touching a sentinel primitive
+        with self._cond:
+            if self._abort is not None:
+                raise _Abort()
+            self.schedule.append((name,) + label)
+            self._current = None
+            self._cond.notify_all()
+            self._cond.wait_for(
+                lambda: self._current == name or self._abort is not None
+            )
+            if self._abort is not None:
+                raise _Abort()
+
+    def _block(self, primitive) -> None:
+        """Park the current thread until ``primitive`` wakes it."""
+        name = self._current_name()
+        if name is None:
+            raise InterleaveError(
+                "a non-spawned thread blocked on a sentinel primitive"
+            )
+        with self._cond:
+            if self._abort is not None:
+                raise _Abort()
+            rec = self._recs[name]
+            rec["state"] = "blocked"
+            rec["blocker"] = primitive
+            self.schedule.append(
+                (name, "block", getattr(primitive, "name", "?"))
+            )
+            self._current = None
+            self._cond.notify_all()
+            self._cond.wait_for(
+                lambda: self._current == name or self._abort is not None
+            )
+            if self._abort is not None:
+                raise _Abort()
+
+    def _wake_waiters(self, primitive) -> None:
+        with self._cond:
+            for rec in self._recs.values():
+                if rec["state"] == "blocked" and rec["blocker"] is primitive:
+                    rec["state"] = "runnable"
+                    rec["blocker"] = None
+
+    # -- settrace line-granularity yield points ------------------------------
+
+    def _global_tracer(self, frame, event, arg):
+        fname = frame.f_code.co_filename.replace(os.sep, "/")
+        if any(p in fname for p in self.trace_patterns):
+            return self._line_tracer
+        return None
+
+    def _line_tracer(self, frame, event, arg):
+        if event == "line":
+            fname = frame.f_code.co_filename.replace(os.sep, "/")
+            self._op(("line", fname.rsplit("/", 1)[-1], frame.f_lineno))
+        return self._line_tracer

@@ -721,3 +721,12 @@ RULES: dict[str, type] = {
         CheckpointPayloadCompleteness,
     )
 }
+for _r in RULES.values():
+    _r.family = "jit"
+
+# the concurrency/protocol family (JL101-JL106) registers itself here so
+# the engine keeps iterating one registry; concur.py imports the shared
+# helpers from this module, which is why the import sits at the bottom
+from . import concur  # noqa: E402
+
+RULES.update(concur.RULES)
